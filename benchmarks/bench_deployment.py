@@ -1,0 +1,82 @@
+"""Paper Figs. 14/15 — Storm-deployment analogue: throughput & latency.
+
+Setup mirrors §VII-Q4: 8 sources / 24 workers, TW-like stream, fixed
+per-message CPU cost (0.1–1 ms sweep), homogeneous vs heterogeneous
+(two executors cpulimit'ed to 30%). The discrete-event queueing model
+(core.simulation.simulate_deployment) supplies throughput and latency.
+
+Headline paper numbers to reproduce under heterogeneity:
+CG ≥ 2× KG throughput and ≈3.44× better latency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cg, partitioners as P, simulation, streams
+
+from .common import fmt, table
+
+WORKERS = 24
+
+
+def _assignments(keys, caps):
+    """CG routes against the scenario's capacities (it adapts); the
+    static schemes are capacity-oblivious by definition."""
+    out = {"KG": P.key_grouping(keys, WORKERS),
+           "PKG": P.partial_key_grouping(keys, WORKERS),
+           "SG": P.shuffle_grouping(keys, WORKERS)}
+    res = cg.run(cg.CGConfig(n_workers=WORKERS, alpha=20, eps=0.01,
+                             slot_len=5_000, max_moves_per_slot=16),
+                 keys, caps)
+    # steady-state CG routing = the last third of the stream
+    m = keys.shape[0]
+    out["CG"] = res.assignment[2 * m // 3:]
+    return out
+
+
+def run(m: int = 200_000, quick: bool = False):
+    if quick:
+        m = 100_000
+    keys = streams.sample_trace(jax.random.PRNGKey(0), streams.TW_TRACE, m)
+    service_sweep = (0.25, 0.5) if quick else (0.1, 0.25, 0.5, 1.0)
+
+    for tag, frac in [("homogeneous (Fig 14)", np.ones(WORKERS)),
+                      ("heterogeneous: 2 workers @30% (Fig 15)",
+                       np.concatenate([[0.3, 0.3], np.ones(WORKERS - 2)]))]:
+        fr = jnp.asarray(frac, jnp.float32)
+        # CG sees service rates ∝ cpu fractions at ρ = 0.8
+        caps = jnp.asarray(frac / frac.sum() / 0.8, jnp.float32)
+        assigns = _assignments(keys, caps)
+        rows = []
+        for sms in service_sweep:
+            # offer 75% of aggregate capacity: a balanced scheme is
+            # stable, a skew-blind one saturates its worst worker
+            offered = float(frac.sum()) / (sms * 1e-3) * 0.75
+            res = {}
+            for name, a in assigns.items():
+                res[name] = simulation.simulate_deployment(
+                    a, WORKERS, sms, fr, offered_rate_per_s=offered)
+            row = [sms]
+            for name in ("KG", "PKG", "SG", "CG"):
+                r = res[name]
+                row.append(fmt(float(r.throughput) / 1000, 1))
+                row.append(fmt(float(r.mean_latency_ms), 2))
+            cgr, kgr = res["CG"], res["KG"]
+            row.append(fmt(float(cgr.throughput / jnp.maximum(kgr.throughput,
+                                                              1e-9)), 2))
+            row.append(fmt(float(kgr.mean_latency_ms /
+                                 jnp.maximum(cgr.mean_latency_ms, 1e-9)), 2))
+            rows.append(row)
+        print(table(
+            f"Fig 14/15 — TW deployment, {tag}",
+            ["svc_ms", "KG kq/s", "KG ms", "PKG kq/s", "PKG ms",
+             "SG kq/s", "SG ms", "CG kq/s", "CG ms",
+             "CG/KG thr", "KG/CG lat"], rows))
+    print("paper-claim check: heterogeneous CG/KG throughput ≥ 2×, "
+          "KG/CG latency ratio ≥ 3.4× at the saturation service costs")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Beyond paper — the CG technique as an MoE router.
+
+Token drop fraction and expert balance: CG (capacity + overflow
+probing) vs standard capacity-bounded top-k, across router skew, at the
+two assigned MoE geometries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import ref_cg_dispatch
+
+from .common import fmt, table
+
+
+def run(quick: bool = False):
+    geoms = [("qwen3 128e top8", 128, 8, 16, 4096),
+             ("phi3.5 16e top2", 16, 2, 6, 4096)]
+    skews = (0.5, 2.0) if quick else (0.0, 0.5, 1.0, 2.0, 4.0)
+    rows = []
+    for name, E, k, D, T in geoms:
+        for skew in skews:
+            r1, r2 = jax.random.split(jax.random.PRNGKey(int(skew * 10)))
+            logits = jax.random.normal(r1, (T, E)) \
+                + skew * jax.random.normal(r2, (1, E))
+            probs = jax.nn.softmax(logits, -1)
+            gates, pref = jax.lax.top_k(probs, D)
+            cap = max(1, int(1.25 * T * k / E))
+            a_cg, _, _, l_cg = ref_cg_dispatch(
+                pref.astype(jnp.int32), gates, n_experts=E, k=k, capacity=cap)
+            a_tk, _, _, l_tk = ref_cg_dispatch(
+                pref[:, :k].astype(jnp.int32), gates[:, :k], n_experts=E,
+                k=k, capacity=cap)
+            drop_cg = float((np.asarray(a_cg) < 0).mean())
+            drop_tk = float((np.asarray(a_tk) < 0).mean())
+            cv_cg = float(np.std(np.asarray(l_cg)) /
+                          (np.mean(np.asarray(l_cg)) + 1e-9))
+            cv_tk = float(np.std(np.asarray(l_tk)) /
+                          (np.mean(np.asarray(l_tk)) + 1e-9))
+            rows.append([name, skew, fmt(drop_tk, 3), fmt(drop_cg, 3),
+                         fmt(cv_tk, 3), fmt(cv_cg, 3)])
+    print(table("CG-MoE router vs capacity-bounded top-k "
+                "(drop fraction ↓, expert-load CV ↓)",
+                ["geometry", "skew", "drop topk", "drop CG",
+                 "loadCV topk", "loadCV CG"], rows))
+    print("claim: CG (the paper's overflow probing) strictly reduces "
+          "dropped token-slots and flattens expert load as skew grows")
+
+
+if __name__ == "__main__":
+    run()

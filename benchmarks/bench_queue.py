@@ -1,0 +1,61 @@
+"""Paper Figs. 9/10 — queue length, latency, utilization over time.
+
+Fig 9: homogeneous cluster (10 workers @ 80%): KG diverges, CG flat.
+Fig 10: heterogeneous (y=3 workers z=5× faster): KG & SG diverge, CG ≈ 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cg, partitioners as P, simulation, streams
+
+from .common import fmt, table, wp_keys
+
+SLOT = 10_000
+
+
+def _report(tag, series, slots_to_show=5):
+    idx = np.linspace(0, len(series[0][1]) - 1, slots_to_show).astype(int)
+    rows = []
+    for name, s in series:
+        rows.append([name, *(fmt(float(np.asarray(s)[i]), 1) for i in idx)])
+    print(table(tag, ["algo", *(f"t{i}" for i in idx)], rows))
+
+
+def run(m: int = 300_000, quick: bool = False):
+    if quick:
+        m = 150_000
+    keys = wp_keys(m)
+    n = 10
+
+    # ---- Fig 9: homogeneous ----
+    caps = jnp.full((n,), 1.25 / n)
+    kg = simulation.simulate_queues(P.key_grouping(keys, n), caps, n, SLOT)
+    res = cg.run(cg.CGConfig(n_workers=n, alpha=10, eps=0.01,
+                             slot_len=SLOT), keys, caps)
+    _report("Fig 9 — max-min queue length over time (homogeneous)",
+            [("KG", kg.queue_spread), ("CG", res.queue_spread)])
+    _report("Fig 9 — max-min latency over time (homogeneous)",
+            [("KG", kg.latency_spread), ("CG", res.latency_spread)])
+
+    # ---- Fig 10: heterogeneous y=3, z=5 ----
+    capsh = jnp.asarray(streams.heterogeneous_capacities(n, 3, 5.0) / 0.8,
+                        jnp.float32)
+    kg = simulation.simulate_queues(P.key_grouping(keys, n), capsh, n, SLOT)
+    sg = simulation.simulate_queues(P.shuffle_grouping(keys, n), capsh, n, SLOT)
+    res = cg.run(cg.CGConfig(n_workers=n, alpha=10, eps=0.01,
+                             slot_len=SLOT), keys, capsh)
+    _report("Fig 10 — max-min queue length (heterogeneous y=3 z=5)",
+            [("KG", kg.queue_spread), ("SG", sg.queue_spread),
+             ("CG", res.queue_spread)])
+    _report("Fig 10 — imbalance (heterogeneous)",
+            [("KG", kg.imbalance), ("SG", sg.imbalance),
+             ("CG", res.imbalance)])
+    print("paper-claim check: KG and SG queue spread grow with time under "
+          "heterogeneity; CG stays near zero after convergence "
+          f"(CG moves={int(res.moves)})")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Figs. 7/8 — all schemes (+CG) across 5/10/50/100 workers, WP."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cg, metrics, partitioners as P
+
+from .common import fmt, table, wp_keys
+
+SCHEMES = ("KG", "PKG", "POTC", "CH", "PORC", "SG")
+
+
+def run(m: int = 200_000, quick: bool = False):
+    ns = (10, 50) if quick else (5, 10, 50, 100)
+    keys = wp_keys(m)
+    n_keys = 130_000
+    alpha = 10
+    rows_i, rows_m = [], []
+    for n in ns:
+        caps = jnp.ones(n) / n
+        vws = n * alpha
+        row_i, row_m = [n], [n]
+        for s in SCHEMES:
+            # paper setup: schemes run over n×alpha virtual-worker bins
+            a_vw = P.route(s, keys, vws, eps=0.01)
+            a = (a_vw % n).astype(jnp.int32)       # VW → worker (uniform)
+            row_i.append(fmt(float(metrics.normalized_imbalance(a, caps)), 3))
+            row_m.append(int(metrics.memory_footprint(a, keys, n, n_keys)))
+        cfgv = cg.CGConfig(n_workers=n, alpha=alpha, eps=0.01,
+                           slot_len=10_000)
+        res = cg.run(cfgv, keys, jnp.full((n,), 1.25 / n))
+        row_i.append(fmt(float(metrics.normalized_imbalance(
+            res.assignment, caps)), 3))
+        row_m.append(int(metrics.memory_footprint(
+            res.assignment, keys, n, n_keys)))
+        rows_i.append(row_i)
+        rows_m.append(row_m)
+    print(table("Fig 7/8a — normalized imbalance vs #workers (WP)",
+                ["workers", *SCHEMES, "CG"], rows_i))
+    print(table("Fig 7/8b — memory footprint vs #workers (WP)",
+                ["workers", *SCHEMES, "CG"], rows_m))
+    print("paper-claim check: KG/PKG imbalance grows with n; CH/PoRC/CG "
+          "bounded ≈ ε; CG memory < CH; PoTC/SG memory worst")
+
+
+if __name__ == "__main__":
+    run()

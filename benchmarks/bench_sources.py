@@ -1,0 +1,50 @@
+"""Paper Fig. 11 — CG stability across 1/10/50/100 sources.
+
+Sources partition the stream round-robin (the paper assigns messages to
+sources by SG); each source routes its substream with its own local
+load view (the paper's eventual consistency) using the batched PoRC
+kernel, then assignments merge.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.kernels.ref import ref_porc_assign
+
+from .common import fmt, table, wp_keys
+
+
+def run(m: int = 131_072, quick: bool = False):
+    srcs = (1, 10, 50) if quick else (1, 10, 50, 100)
+    ns = (10, 50) if quick else (5, 10, 50, 100)
+    keys = np.asarray(wp_keys(m))
+    n_keys = 130_000
+    rows = []
+    for n in ns:
+        vws = n * 10
+        caps = jnp.ones(n) / n
+        for s in srcs:
+            # round-robin split across sources; each source routes with
+            # an independent (local) load estimate
+            assign_vw = np.empty(m, np.int32)
+            for i in range(s):
+                sub = jnp.asarray(keys[i::s])
+                pad = (-len(sub)) % 128
+                subp = jnp.concatenate([sub, jnp.zeros(pad, jnp.int32)])
+                a, _ = ref_porc_assign(subp, vws, eps=0.01)
+                assign_vw[i::s] = np.asarray(a)[:len(sub)]
+            a_w = jnp.asarray(assign_vw % n, jnp.int32)
+            imb = float(metrics.normalized_imbalance(a_w, caps))
+            mem = int(metrics.memory_footprint(a_w, jnp.asarray(keys),
+                                               n, n_keys))
+            rows.append([n, s, fmt(imb, 4), mem])
+    print(table("Fig 11 — CG/PoRC imbalance & memory vs #sources (WP)",
+                ["workers", "sources", "imbalance", "memory"], rows))
+    print("paper-claim check: imbalance and memory stay flat (log scale) "
+          "as sources grow 1→100 — local load views suffice")
+
+
+if __name__ == "__main__":
+    run()

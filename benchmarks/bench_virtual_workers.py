@@ -1,0 +1,46 @@
+"""Paper Fig. 12 — effect of the virtual-worker count (5…1000).
+
+Heterogeneous cluster y=3, z=5. Too few VWs → can't express capacity
+ratios; too many → slow convergence; ~100 best (paper's finding).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cg, streams
+
+from .common import fmt, table, wp_keys
+
+
+def run(m: int = 300_000, quick: bool = False):
+    alphas = (1, 10, 100) if quick else (1, 2, 5, 10, 100)
+    # alpha = VWs per worker; paper sweeps total VWs 5..1000 on 10 workers
+    n = 10
+    if quick:
+        m = 150_000
+    keys = wp_keys(m)
+    caps = jnp.asarray(streams.heterogeneous_capacities(n, 3, 5.0) / 0.8,
+                       jnp.float32)
+    rows = []
+    for a in alphas:
+        cfgv = cg.CGConfig(n_workers=n, alpha=a, eps=0.01, slot_len=10_000,
+                           max_moves_per_slot=8)
+        res = cg.run(cfgv, keys, caps)
+        imb = np.asarray(res.imbalance)
+        rows.append([n * a,
+                     fmt(float(imb[:3].mean()), 3),
+                     fmt(float(imb[-3:].mean()), 3),
+                     fmt(float(np.asarray(res.queue_spread)[-1]), 1),
+                     fmt(float(np.asarray(res.latency_spread)[-1]), 1),
+                     int(res.moves)])
+    print(table("Fig 12 — virtual-worker count sweep (heterogeneous y=3 z=5)",
+                ["VWs", "imb(start)", "imb(end)", "queueΔ(end)",
+                 "latΔ(end)", "moves"], rows))
+    print("paper-claim check: ~10 VWs/worker can't match 5× capacity "
+          "ratios (imbalance floor); ≈100/worker converges best; very "
+          "large counts converge slower per message")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, partitioners as P, streams
+
+
+def table(title: str, headers: list[str], rows: list[list]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) + 2
+              for i, h in enumerate(headers)]
+    out = [f"\n== {title} =="]
+    out.append("".join(str(h).rjust(w) for h, w in zip(headers, widths)))
+    out.append("".join("-" * w for w in widths))
+    for r in rows:
+        out.append("".join(str(c).rjust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def fmt(x, nd=4):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x != 0 and (abs(x) >= 1e5 or abs(x) < 1e-3):
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def wp_keys(m: int, seed: int = 0) -> jnp.ndarray:
+    return streams.sample_trace(jax.random.PRNGKey(seed), streams.WP_TRACE, m)
+
+
+def scheme_stats(scheme: str, keys, n_bins: int, n_keys: int, eps: float):
+    a = P.route(scheme, keys, n_bins, eps=eps)
+    caps = jnp.ones(n_bins) / n_bins
+    imb = float(metrics.normalized_imbalance(a, caps))
+    mem = int(metrics.memory_footprint(a, keys, n_bins, n_keys))
+    return imb, mem
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_deployment, bench_dynamic, bench_epsilon,
+               bench_moe_router, bench_porc_schemes, bench_queue,
+               bench_schemes_workers, bench_sources,
+               bench_virtual_workers, roofline)
+
+ALL = [
+    ("porc_schemes", bench_porc_schemes),      # Fig 4
+    ("epsilon", bench_epsilon),                # Fig 6
+    ("schemes_workers", bench_schemes_workers),  # Fig 7/8
+    ("queue", bench_queue),                    # Fig 9/10
+    ("sources", bench_sources),                # Fig 11
+    ("virtual_workers", bench_virtual_workers),  # Fig 12
+    ("dynamic", bench_dynamic),                # Fig 13
+    ("deployment", bench_deployment),          # Fig 14/15
+    ("moe_router", bench_moe_router),          # beyond paper
+    ("roofline", roofline),                    # §Roofline
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    for name, mod in ALL:
+        if args.only and args.only != name:
+            continue
+        t = time.time()
+        print(f"\n{'='*72}\n[{name}]")
+        try:
+            mod.run(quick=args.quick)
+        except TypeError:
+            mod.run()
+        print(f"[{name}] done in {time.time()-t:.1f}s", flush=True)
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

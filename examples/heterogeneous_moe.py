@@ -1,0 +1,41 @@
+"""The paper's technique inside an MoE layer (DESIGN.md §2 site a).
+
+Builds the qwen3-style MoE smoke model twice — once with the standard
+capacity-bounded top-k router (drops overflow tokens) and once with the
+CG router (overflow probes the token's next-choice experts) — and
+compares drop rate, expert balance, and loss on a skewed batch.
+
+  PYTHONPATH=src python examples/heterogeneous_moe.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model_zoo as zoo
+from repro.moe.layer import init_moe_params, moe_ffn
+
+base = configs.get_smoke_config("qwen3-moe-235b-a22b")
+key = jax.random.PRNGKey(0)
+
+print("=== router comparison on a skew-biased layer ===")
+p = init_moe_params(key, base, jnp.bfloat16)
+# bias the router hard toward expert 0 (a "hot key")
+p["router"] = p["router"] + 5.0 * jax.nn.one_hot(0, base.moe.n_experts)
+x = jax.random.normal(key, (2, 64, base.d_model), jnp.bfloat16)
+for router in ("topk", "cg"):
+    cfg = base.replace(moe=dataclasses.replace(base.moe, router=router))
+    y, m = moe_ffn(x, p, cfg)
+    print(f"  {router:5s} drop_frac={float(m['drop_frac']):.3f} "
+          f"max_load_frac={float(m['max_load_frac']):.3f}")
+print("  → CG turns dropped overflow slots into next-choice assignments")
+
+print("\n=== one train step each on the full smoke model ===")
+for router in ("topk", "cg"):
+    cfg = base.replace(moe=dataclasses.replace(base.moe, router=router))
+    params = zoo.init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab)}
+    loss = jax.jit(lambda p, b, c=cfg: zoo.loss_fn(p, c, b))(params, batch)
+    print(f"  {router:5s} loss={float(loss):.4f}")

@@ -1,0 +1,16 @@
+"""Serving example: batched decode behind the CG request router.
+
+Four replicas of a small LM (one 20× slower — the paper's cpulimit
+heterogeneity), a zipf-skewed session-key stream, and the CG router
+pairing busy→idle virtual replicas from queue-occupancy signals.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma3-1b", "--requests", "48",
+                "--decode-steps", "4", "--replicas", "4", "--hetero"]
+    main()

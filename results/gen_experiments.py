@@ -1,0 +1,75 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun/*.json. The narrative sections are maintained by hand in
+EXPERIMENTS.md around the AUTOGEN markers."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyze  # noqa: E402
+from repro import configs  # noqa: E402
+
+
+def load():
+    reps = []
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))[0]
+        reps.append(r)
+    order = {s: i for i, s in enumerate(
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"])}
+    reps.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    return reps
+
+
+def dryrun_table(reps):
+    lines = ["| arch | shape | mesh | ok | compile s | temp GiB/dev | "
+             "args GiB/dev | coll GiB/dev | coll breakdown |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in reps:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL | | | | {r.get('error','')[:60]} |")
+            continue
+        bk = r["collectives"]["bytes_by_kind"]
+        brk = " ".join(f"{k.split('-')[-1][:4]}:{v/2**20:.0f}M"
+                       for k, v in sorted(bk.items(), key=lambda kv: -kv[1])
+                       if v > 2**20) or "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | "
+            f"{(r['memory'].get('temp_size_in_bytes') or 0)/2**30:.2f} | "
+            f"{(r['memory'].get('argument_size_in_bytes') or 0)/2**30:.2f} | "
+            f"{r['collectives']['total_bytes']/2**30:.3f} | {brk} |")
+    # skipped cells
+    for a, s, ok in configs.cells():
+        if not ok:
+            lines.append(f"| {a} | {s} | both | **skipped** | | | | | "
+                         f"full-attention arch at 500k (DESIGN §4) |")
+    return "\n".join(lines)
+
+
+def roofline_table(reps):
+    lines = ["| arch | shape | mesh | compute ms | memory ms | coll ms | "
+             "dominant | useful/roof | MODEL/computed |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in reps:
+        if not r.get("ok"):
+            continue
+        a = analyze(r)
+        ratio = a["useful_flops"] / max(a["computed_flops"], 1)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+            f"{a['t_comp']*1e3:.2f} | {a['t_mem']*1e3:.2f} | "
+            f"{a['t_coll']*1e3:.2f} | {a['dominant']} | "
+            f"{a['useful_frac']:.3f} | {ratio:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    reps = load()
+    open("results/dryrun_table.md", "w").write(dryrun_table(reps))
+    open("results/roofline_table.md", "w").write(roofline_table(reps))
+    n_ok = sum(1 for r in reps if r.get("ok"))
+    print(f"{n_ok}/{len(reps)} cells ok; tables written")

@@ -1,0 +1,2 @@
+from . import checkpointer  # noqa: F401
+from .checkpointer import AsyncCheckpointer, latest_step, restore, save  # noqa: F401

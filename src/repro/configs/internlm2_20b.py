@@ -1,0 +1,15 @@
+"""internlm2-20b [dense]: 48L d=6144 48H (GQA kv=8) d_ff=16384 vocab=92544.
+
+GQA [arXiv:2403.17297; hf]. Pure full attention → long_500k skipped.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+    d_ff=16384, vocab=92_544,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=256, attn_chunk_threshold=1 << 30, remat="none")

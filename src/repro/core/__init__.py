@@ -1,0 +1,4 @@
+"""Paper core: partitioners, Consistent Grouping runtime, simulation."""
+from . import cg, hashing, metrics, partitioners, simulation, streams  # noqa: F401
+
+__all__ = ["cg", "hashing", "metrics", "partitioners", "simulation", "streams"]

@@ -1,0 +1,219 @@
+"""Consistent Grouping (CG) — the paper's contribution (§V-B, §V-C).
+
+CG = (1) PoRC routing of messages onto α·n *homogeneous virtual workers*
++ (2) capacity-driven assignment of virtual workers to heterogeneous
+physical workers via *worker delegation* signals and *paired* moves.
+
+Model fidelity notes
+--------------------
+* **Time slot** (t₀): the monitoring period. One slot = ``slot_len``
+  messages (one message per unit time, §IV). Signals computed at slot
+  end take effect the next slot — this one-slot lag *is* the
+  piggybacking/eventual-consistency delay of §V-C.
+* **Delegation**: worker w signals *busy* when its slot utilization
+  ``U_w = arrivals_w/(c_w·slot_len)`` exceeds θ_b and *idle* below θ_i
+  (paper uses θ_i=0.75, θ_b=0.85 around a ρ=0.8 provisioning point).
+  Capacities are **never revealed to the sources** — only the binary
+  signals are.
+* **Pairing**: every VW removal from a busy worker is paired with an
+  addition to an idle worker (§V-B "pairing virtual workers"), keeping
+  the VW population constant. Within a slot all signals arrive together,
+  so the FCFS queues degenerate to a deterministic severity order
+  (most-overloaded busy ↔ most-underloaded idle); across slots the
+  one-move-per-signal budget reproduces FCFS pacing. The migrated VW is
+  the busy worker's most loaded one (greatest relief); routing changes
+  affect only *future* messages — no message migration (§V-C).
+* **Queues**: each worker drains ``c_w·slot_len`` messages per slot from
+  an unbounded FIFO — the queueing model of §IV used for Fig 9/10/12/13.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_to_bins
+
+
+class CGConfig(NamedTuple):
+    n_workers: int
+    alpha: int = 10               # virtual workers per worker at init
+    eps: float = 0.01             # PoRC imbalance/memory knob
+    theta_busy: float = 0.85
+    theta_idle: float = 0.75
+    slot_len: int = 10_000        # messages per time slot t0
+    max_moves_per_slot: int = 8   # paired (busy→idle) moves per slot
+    inner: str = "PORC"           # VW-level scheme: PORC | KG | SG
+
+
+class CGState(NamedTuple):
+    vw_load: jnp.ndarray     # [V]  source-side per-VW message counts
+    vw_owner: jnp.ndarray    # [V]  physical worker owning each VW
+    queues: jnp.ndarray      # [n]  worker FIFO occupancy
+    t_offset: jnp.ndarray    # []   messages routed so far
+    moves: jnp.ndarray       # []   cumulative paired moves
+
+
+class CGResult(NamedTuple):
+    assignment: jnp.ndarray        # [m] physical-worker id per message
+    vw_assignment: jnp.ndarray     # [m] virtual-worker id per message
+    imbalance: jnp.ndarray         # [slots] I(t) over normalized load
+    queue_spread: jnp.ndarray      # [slots] max-min queue length
+    latency_spread: jnp.ndarray    # [slots] max-min latency proxy
+    mean_latency: jnp.ndarray      # [slots] arrival-weighted mean latency
+    utilization: jnp.ndarray       # [slots, n] per-worker utilization
+    moves: jnp.ndarray             # [] total VW migrations
+    state: CGState
+
+
+def init_state(cfg: CGConfig) -> CGState:
+    n, a = cfg.n_workers, cfg.alpha
+    V = n * a
+    return CGState(
+        vw_load=jnp.zeros(V, jnp.float32),
+        vw_owner=jnp.tile(jnp.arange(n, dtype=jnp.int32), a),
+        queues=jnp.zeros(n, jnp.float32),
+        t_offset=jnp.zeros((), jnp.float32),
+        moves=jnp.zeros((), jnp.int32),
+    )
+
+
+def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
+    """Route one slot of messages onto virtual workers (inner scheme)."""
+    V = cfg.n_workers * cfg.alpha
+    if cfg.inner == "KG":
+        vw = hash_to_bins(keys, 1, V)
+        vw_load = vw_load.at[vw].add(1.0)
+        return vw_load, vw
+    if cfg.inner == "SG":
+        m = keys.shape[0]
+        vw = ((t_offset.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32)) % V)
+        vw_load = vw_load.at[vw].add(1.0)
+        return vw_load, vw
+
+    # PoRC (Alg. 1) continuing across slots: capacity uses global time.
+    max_probes = 4 * V
+
+    def step(carry, xt):
+        load, t = carry
+        key = xt
+        cap = (1.0 + cfg.eps) * (t + 1.0) / V
+
+        def cond(c):
+            _, bin_, probes = c
+            return (load[bin_] >= cap) & (probes < max_probes)
+
+        def body(c):
+            salt, _, probes = c
+            salt = salt + 1
+            return salt, hash_to_bins(key, salt, V), probes + 1
+
+        init = (jnp.uint32(1), hash_to_bins(key, jnp.uint32(1), V), jnp.int32(0))
+        _, bin_, probes = jax.lax.while_loop(cond, body, init)
+        bin_ = jnp.where(probes >= max_probes,
+                         jnp.argmin(load).astype(jnp.int32), bin_)
+        return (load.at[bin_].add(1.0), t + 1.0), bin_
+
+    (vw_load, _), vw = jax.lax.scan(step, (vw_load, t_offset), keys)
+    return vw_load, vw
+
+
+def _paired_moves(cfg: CGConfig, vw_load, vw_owner, util):
+    """Worker delegation + pairing: move ≤ max_moves VWs busy→idle."""
+    busy = util > cfg.theta_busy
+    idle = util < cfg.theta_idle
+    n_pairs = jnp.minimum(jnp.sum(busy), jnp.sum(idle))
+    n_pairs = jnp.minimum(n_pairs, cfg.max_moves_per_slot).astype(jnp.int32)
+
+    neg_inf = jnp.float32(-jnp.inf)
+    pos_inf = jnp.float32(jnp.inf)
+    busy_rank = jnp.argsort(jnp.where(busy, -util, pos_inf))   # most busy first
+    idle_rank = jnp.argsort(jnp.where(idle, util, pos_inf))    # most idle first
+
+    def move(i, carry):
+        owner, done = carry
+        src = busy_rank[i]
+        dst = idle_rank[i]
+        owned = owner == src
+        # most-loaded VW of the busy worker
+        v = jnp.argmax(jnp.where(owned, vw_load, neg_inf))
+        can = (i < n_pairs) & jnp.any(owned)
+        owner = owner.at[v].set(jnp.where(can, dst, owner[v]).astype(owner.dtype))
+        return owner, done + can.astype(jnp.int32)
+
+    vw_owner, n_done = jax.lax.fori_loop(
+        0, cfg.max_moves_per_slot, move, (vw_owner, jnp.int32(0)))
+    return vw_owner, n_done
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run(cfg: CGConfig, keys: jnp.ndarray,
+        capacities: jnp.ndarray) -> CGResult:
+    """Run CG over a key stream.
+
+    Args:
+      cfg: CGConfig (n_workers, alpha, eps, thresholds, slot_len, inner).
+      keys: [m] int32 key stream; m must be a multiple of slot_len.
+      capacities: [n] static, or [slots, n] time-varying *service rates*
+        in messages per unit time (arrival rate is 1 msg/unit time).
+
+    Returns CGResult with per-slot metrics and the full assignment.
+    """
+    m = keys.shape[0]
+    slots = m // cfg.slot_len
+    assert slots * cfg.slot_len == m, "stream length must be slots*slot_len"
+    keys = keys[: slots * cfg.slot_len].reshape(slots, cfg.slot_len)
+    if capacities.ndim == 1:
+        caps = jnp.broadcast_to(capacities, (slots, cfg.n_workers))
+    else:
+        caps = capacities
+    caps = caps.astype(jnp.float32)
+
+    def slot_step(state: CGState, xs):
+        slot_keys, c = xs
+        vw_load, vw = _route_slot(cfg, state.vw_load, state.t_offset, slot_keys)
+        workers = state.vw_owner[vw]                       # [slot_len]
+        arrivals = jnp.zeros(cfg.n_workers, jnp.float32).at[workers].add(1.0)
+
+        service = c * cfg.slot_len                          # msgs drainable
+        q0 = state.queues
+        q1 = jnp.maximum(q0 + arrivals - service, 0.0)
+
+        util = arrivals / jnp.maximum(service, 1e-9)
+        # latency proxy: wait behind queue + own service (units of time)
+        lat = (q0 + 0.5 * arrivals) / jnp.maximum(c, 1e-9) + 1.0 / jnp.maximum(c, 1e-9)
+        mean_lat = jnp.sum(lat * arrivals) / jnp.maximum(jnp.sum(arrivals), 1.0)
+
+        norm_load = arrivals / jnp.maximum(c, 1e-9)
+        imb = (jnp.max(norm_load) - jnp.mean(norm_load)) / jnp.maximum(
+            jnp.mean(norm_load), 1e-9)
+
+        vw_owner, n_moved = _paired_moves(cfg, vw_load, state.vw_owner, util)
+
+        new_state = CGState(
+            vw_load=vw_load,
+            vw_owner=vw_owner,
+            queues=q1,
+            t_offset=state.t_offset + cfg.slot_len,
+            moves=state.moves + n_moved,
+        )
+        metrics = (workers, vw, imb, jnp.max(q1) - jnp.min(q1),
+                   jnp.max(lat) - jnp.min(lat), mean_lat, util)
+        return new_state, metrics
+
+    state0 = init_state(cfg)
+    state, (workers, vw, imb, qs, ls, ml, util) = jax.lax.scan(
+        slot_step, state0, (keys, caps))
+    return CGResult(
+        assignment=workers.reshape(-1),
+        vw_assignment=vw.reshape(-1),
+        imbalance=imb,
+        queue_spread=qs,
+        latency_spread=ls,
+        mean_latency=ml,
+        utilization=util,
+        moves=state.moves,
+        state=state,
+    )

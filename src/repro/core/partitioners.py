@@ -1,0 +1,209 @@
+"""The seven stream-partitioning strategies of the paper (Table II).
+
+Every partitioner consumes a key stream (int32 ids) and produces, one
+message at a time (``jax.lax.scan`` — exactly the paper's "one message
+per unit time" model), the bin index each message is routed to.
+
+Bins are *virtual workers* when driven by ``repro.core.cg`` and physical
+workers when used standalone (the paper's Figures 4/7/8 use them
+standalone over n_bins = workers × VWs).
+
+Schemes
+-------
+KG    key grouping                      H(j)                    stateless
+SG    shuffle grouping                  round robin             stateless
+PKG   partial key grouping              2 key-choices, argmin   load state
+PoTC  power of two choices              2 msg-choices, argmin   load state
+CH    consistent hashing bounded load   clockwise probe < cap   ring + load
+PoRC  power of random choices (Alg. 1)  salted probe < cap      load state
+GREEDY_D  Greedy-d (§VI-A-1)            d key-choices, argmin   load state
+
+The batch-parallel (eventually-consistent) PoRC lives in
+``repro.kernels`` — this module is the exact sequential oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_to_bins, hash_u32, hash_unit_interval
+
+# Cap on PoRC/CH probe chains. The analysis (§VI-B) shows a key never
+# needs more than ~n probes once eps > 1/(n-1); 4·n is a safe ceiling.
+_MAX_PROBES_FACTOR = 4
+
+
+# ---------------------------------------------------------------------------
+# Stateless schemes
+# ---------------------------------------------------------------------------
+
+def key_grouping(keys: jnp.ndarray, n_bins: int, salt: int = 1) -> jnp.ndarray:
+    """KG: pure hash of the key."""
+    return hash_to_bins(keys, salt, n_bins)
+
+
+def shuffle_grouping(keys: jnp.ndarray, n_bins: int, offset: int = 0) -> jnp.ndarray:
+    """SG: cyclic round robin, key-oblivious."""
+    m = keys.shape[0]
+    return ((jnp.arange(m, dtype=jnp.int32) + offset) % n_bins).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Greedy-d (covers PKG d=2 on keys, PoTC d=2 on message ids)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "d", "on_message_id"))
+def greedy_d(keys: jnp.ndarray, n_bins: int, d: int = 2,
+             on_message_id: bool = False) -> jnp.ndarray:
+    """Greedy-d balls-and-bins (§VI-A-1): place on argmin-load choice.
+
+    ``on_message_id=False`` hashes the *key* (PKG when d=2: key splitting);
+    ``on_message_id=True`` hashes the *message index* (PoTC when d=2 —
+    equivalent to fresh random choices per message).
+    """
+    m = keys.shape[0]
+    ids = jnp.arange(m, dtype=jnp.int32) if on_message_id else keys
+    salts = jnp.arange(1, d + 1, dtype=jnp.uint32)
+
+    def step(load, x):
+        cand = hash_to_bins(x, salts, n_bins)           # (d,)
+        pick = cand[jnp.argmin(load[cand])]
+        return load.at[pick].add(1), pick
+
+    _, assignment = jax.lax.scan(step, jnp.zeros(n_bins, jnp.int32), ids)
+    return assignment
+
+
+def partial_key_grouping(keys: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """PKG = Greedy-2 over keys."""
+    return greedy_d(keys, n_bins, d=2, on_message_id=False)
+
+
+def power_of_two_choices(keys: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """PoTC = Greedy-2 over message ids."""
+    return greedy_d(keys, n_bins, d=2, on_message_id=True)
+
+
+# ---------------------------------------------------------------------------
+# PoRC — Algorithm 1, exact sequential semantics
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "eps"))
+def power_of_random_choices(keys: jnp.ndarray, n_bins: int,
+                            eps: float = 0.01) -> jnp.ndarray:
+    """PoRC (Alg. 1): probe H(j+salt), salt=1,2,… until load < (1+eps)·m_t/n.
+
+    m_t counts the arriving message itself so the capacity is strictly
+    positive from the first message on. A probe ceiling of 4·n_bins
+    guards the (never observed once eps > 1/(n-1)) pathological chain;
+    on exhaustion the least-loaded bin is used.
+    """
+    m = keys.shape[0]
+    max_probes = _MAX_PROBES_FACTOR * n_bins
+
+    def step(load, xt):
+        key, t = xt
+        cap = (1.0 + eps) * (t + 1.0) / n_bins
+
+        def cond(c):
+            salt, bin_, probes = c
+            return (load[bin_] >= cap) & (probes < max_probes)
+
+        def body(c):
+            salt, _, probes = c
+            salt = salt + 1
+            return salt, hash_to_bins(key, salt, n_bins), probes + 1
+
+        init = (jnp.uint32(1), hash_to_bins(key, jnp.uint32(1), n_bins),
+                jnp.int32(0))
+        _, bin_, probes = jax.lax.while_loop(cond, body, init)
+        bin_ = jnp.where(probes >= max_probes, jnp.argmin(load).astype(jnp.int32), bin_)
+        return load.at[bin_].add(1.0), bin_
+
+    t = jnp.arange(m, dtype=jnp.float32)
+    _, assignment = jax.lax.scan(step, jnp.zeros(n_bins, jnp.float32), (keys, t))
+    return assignment
+
+
+# ---------------------------------------------------------------------------
+# CH — consistent hashing with bounded loads (Mirrokni et al.)
+# ---------------------------------------------------------------------------
+
+class _Ring(NamedTuple):
+    order: jnp.ndarray      # bin ids sorted by ring position
+    positions: jnp.ndarray  # sorted ring positions
+
+
+def build_ring(n_bins: int, points_per_bin: int = 1, salt0: int = 7) -> _Ring:
+    """Hash each bin onto the unit circle (points_per_bin replicas)."""
+    bins = jnp.arange(n_bins, dtype=jnp.int32)
+    salts = jnp.arange(salt0, salt0 + points_per_bin, dtype=jnp.uint32)
+    pos = hash_unit_interval(bins[:, None], salts).reshape(-1)
+    owners = jnp.tile(bins[:, None], (1, points_per_bin)).reshape(-1)
+    idx = jnp.argsort(pos)
+    return _Ring(order=owners[idx], positions=pos[idx])
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "eps", "points_per_bin"))
+def consistent_hashing_bounded(keys: jnp.ndarray, n_bins: int,
+                               eps: float = 0.01,
+                               points_per_bin: int = 1) -> jnp.ndarray:
+    """CH: walk clockwise from H(key)'s successor to first bin with
+    load < (1+eps)·m_t/n (Consistent Hashing with Bounded Loads)."""
+    ring = build_ring(n_bins, points_per_bin)
+    n_points = ring.order.shape[0]
+    m = keys.shape[0]
+    max_probes = _MAX_PROBES_FACTOR * n_points
+
+    def step(load, xt):
+        key, t = xt
+        cap = (1.0 + eps) * (t + 1.0) / n_bins
+        p = hash_unit_interval(key, jnp.uint32(1))
+        start = jnp.searchsorted(ring.positions, p) % n_points
+
+        def cond(c):
+            i, probes = c
+            return (load[ring.order[i]] >= cap) & (probes < max_probes)
+
+        def body(c):
+            i, probes = c
+            return (i + 1) % n_points, probes + 1
+
+        i, probes = jax.lax.while_loop(cond, body, (start.astype(jnp.int32),
+                                                    jnp.int32(0)))
+        bin_ = jnp.where(probes >= max_probes,
+                         jnp.argmin(load).astype(jnp.int32), ring.order[i])
+        return load.at[bin_].add(1.0), bin_
+
+    t = jnp.arange(m, dtype=jnp.float32)
+    _, assignment = jax.lax.scan(step, jnp.zeros(n_bins, jnp.float32), (keys, t))
+    return assignment
+
+
+# ---------------------------------------------------------------------------
+# Registry used by benchmarks and the CG runtime
+# ---------------------------------------------------------------------------
+
+def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
+          eps: float = 0.01) -> jnp.ndarray:
+    """Route a full stream with the named scheme (paper Table II symbols)."""
+    scheme = scheme.upper()
+    if scheme == "KG":
+        return key_grouping(keys, n_bins)
+    if scheme == "SG":
+        return shuffle_grouping(keys, n_bins)
+    if scheme == "PKG":
+        return partial_key_grouping(keys, n_bins)
+    if scheme == "POTC":
+        return power_of_two_choices(keys, n_bins)
+    if scheme == "PORC":
+        return power_of_random_choices(keys, n_bins, eps=eps)
+    if scheme == "CH":
+        return consistent_hashing_bounded(keys, n_bins, eps=eps)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+ALL_SCHEMES = ("KG", "SG", "PKG", "POTC", "CH", "PORC")

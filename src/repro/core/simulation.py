@@ -1,0 +1,122 @@
+"""Queueing simulation of workers (paper §IV cost model, Figs 9/10/13/14/15).
+
+Arrival process: one message per unit time, routed by some partitioner.
+Each worker w drains its unbounded FIFO at service rate c_w messages per
+unit time. Metrics are evaluated per *slot* (the same t₀ granularity the
+CG runtime monitors at), which reproduces the paper's hourly plots.
+
+``simulate_queues`` works for any static assignment (KG/SG/PKG/...);
+CG produces the same metrics inline (repro.core.cg) because its routing
+changes over time.
+
+``simulate_deployment`` is the Fig 14/15 analogue: a
+throughput/latency sweep where per-message service cost is a fixed
+delay (the paper emulates CPU cost with 0.1–1 ms delays) and some
+executors are cpulimit-ed to a fraction of nominal speed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QueueSimResult(NamedTuple):
+    queue_spread: jnp.ndarray    # [slots] max-min queue length
+    latency_spread: jnp.ndarray  # [slots] max-min latency proxy
+    mean_latency: jnp.ndarray    # [slots]
+    p_max_latency: jnp.ndarray   # [slots] latency at the slowest worker
+    imbalance: jnp.ndarray       # [slots] normalized-load imbalance
+    utilization: jnp.ndarray     # [slots, n]
+    throughput: jnp.ndarray      # [slots] messages drained per unit time
+    final_queues: jnp.ndarray    # [n]
+
+
+@functools.partial(jax.jit, static_argnames=("n_workers", "slot_len"))
+def simulate_queues(assignment: jnp.ndarray, capacities: jnp.ndarray,
+                    n_workers: int, slot_len: int) -> QueueSimResult:
+    """Slot-stepped fluid queueing sim for a fixed routing of the stream.
+
+    Args:
+      assignment: [m] worker ids.
+      capacities: [n] or [slots, n] service rates (msgs/unit-time).
+    """
+    m = assignment.shape[0]
+    slots = m // slot_len
+    a = assignment[: slots * slot_len].reshape(slots, slot_len)
+    if capacities.ndim == 1:
+        caps = jnp.broadcast_to(capacities, (slots, n_workers))
+    else:
+        caps = capacities
+    caps = caps.astype(jnp.float32)
+
+    def step(q0, xs):
+        slot_a, c = xs
+        arrivals = jnp.zeros(n_workers, jnp.float32).at[slot_a].add(1.0)
+        service = c * slot_len
+        drained = jnp.minimum(q0 + arrivals, service)
+        q1 = q0 + arrivals - drained
+
+        lat = (q0 + 0.5 * arrivals) / jnp.maximum(c, 1e-9) + 1.0 / jnp.maximum(c, 1e-9)
+        mean_lat = jnp.sum(lat * arrivals) / jnp.maximum(jnp.sum(arrivals), 1.0)
+        util = arrivals / jnp.maximum(service, 1e-9)
+        norm_load = arrivals / jnp.maximum(c, 1e-9)
+        imb = (jnp.max(norm_load) - jnp.mean(norm_load)) / jnp.maximum(
+            jnp.mean(norm_load), 1e-9)
+        out = (jnp.max(q1) - jnp.min(q1), jnp.max(lat) - jnp.min(lat),
+               mean_lat, jnp.max(lat), imb, util,
+               jnp.sum(drained) / slot_len)
+        return q1, out
+
+    q0 = jnp.zeros(n_workers, jnp.float32)
+    qf, (qs, ls, ml, pl, imb, util, thr) = jax.lax.scan(step, q0, (a, caps))
+    return QueueSimResult(qs, ls, ml, pl, imb, util, thr, qf)
+
+
+class DeploymentResult(NamedTuple):
+    throughput: jnp.ndarray      # messages/second sustained
+    mean_latency_ms: jnp.ndarray
+    p99_latency_ms: jnp.ndarray
+
+
+def simulate_deployment(assignment: jnp.ndarray, n_workers: int,
+                        service_ms: float,
+                        cpu_fraction: jnp.ndarray,
+                        offered_rate_per_s: float) -> DeploymentResult:
+    """Fig 14/15 analogue: Storm-like deployment with fixed per-message cost.
+
+    Storm's acking backpressure (``max.spout.pending``) throttles the
+    *sources* globally when any executor saturates — topology throughput
+    is bound by the worst (service rate / routed share) worker:
+
+        thr = min(offered, min_w  svc_w / share_w)
+
+    Latency: per-worker M/D/1 wait at its realized utilization (the
+    binding worker sits near ρ→1 and dominates — exactly the paper's
+    observation that one overloaded executor drags end-to-end latency).
+
+    Args:
+      assignment: worker id per message (a long representative sample).
+      service_ms: nominal per-message processing delay (0.1–1 ms sweep).
+      cpu_fraction: [n] fraction of nominal speed (cpulimit; 1.0 = full,
+        0.3 = the paper's constrained executors).
+      offered_rate_per_s: messages/s offered by the sources.
+    """
+    m = assignment.shape[0]
+    share = jnp.zeros(n_workers, jnp.float32).at[assignment].add(1.0) / m
+    svc_rate = cpu_fraction / (service_ms * 1e-3)          # msgs/s per worker
+    # global backpressure: the worst share/capacity worker binds everyone
+    per_worker_cap = jnp.where(share > 0, svc_rate / jnp.maximum(share, 1e-9),
+                               jnp.inf)
+    throughput = jnp.minimum(offered_rate_per_s, jnp.min(per_worker_cap))
+
+    arr_rate = share * throughput
+    rho = jnp.clip(arr_rate / jnp.maximum(svc_rate, 1e-9), 0.0, 0.995)
+    s_ms = jnp.asarray(service_ms, jnp.float32) / cpu_fraction
+    wait = rho / (2.0 * (1.0 - rho)) * s_ms                # M/D/1
+    lat_ms = s_ms + wait
+    mean_lat = jnp.sum(lat_ms * share)
+    p99 = jnp.max(jnp.where(share > 0, lat_ms, 0.0))
+    return DeploymentResult(throughput, mean_lat, p99)

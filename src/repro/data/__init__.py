@@ -1,0 +1,1 @@
+from .pipeline import PipelineConfig, ShardedTokenPipeline  # noqa: F401

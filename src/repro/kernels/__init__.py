@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+porc_assign — the paper's Alg. 1 routing loop (block-synchronous).
+cg_dispatch — CG MoE dispatch: capacity-bounded with overflow.
+ssd_scan    — Mamba-2 SSD chunked recurrence (assigned ssm/hybrid archs).
+
+``ops`` holds the public jit'd wrappers; ``ref`` the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import cg_dispatch, porc_assign, ssd_scan  # noqa: F401

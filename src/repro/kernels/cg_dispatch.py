@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: CG MoE dispatch — capacity-bounded with overflow.
+
+The paper's chromatic balls-and-bins (§VI-A-1) instantiated as an MoE
+token router: tokens are balls, experts are bins, expert capacity is the
+(1+ε)·avg bound. Unlike standard top-k routing (which *drops* tokens at
+full experts), an overflowing token-slot diverts to the token's
+next-preferred expert with spare capacity — PoRC's salted-probe
+sequence, with the gate-sorted expert list playing the hash sequence.
+
+Grid: (T // block,) sequential; per-expert load in VMEM scratch.
+Semantics bit-identical to ``ref.ref_cg_dispatch``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
+                     loadout_ref, load_ref, *, n_experts: int, k: int,
+                     capacity: int, block: int, n_blocks: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        load_ref[...] = jnp.zeros_like(load_ref)
+
+    p = pref_ref[...]                                     # [B, D]
+    g = gates_ref[...]
+    D = p.shape[1]
+    load = load_ref[...]
+    experts = jnp.arange(n_experts, dtype=jnp.int32)
+
+    assign = jnp.full((block, k), -1, jnp.int32)
+    slot = jnp.full((block, k), -1, jnp.int32)
+    wts = jnp.zeros((block, k), jnp.float32)
+    nacc = jnp.zeros((block,), jnp.int32)
+
+    def rank_step(r, carry):
+        load, assign, slot, wts, nacc = carry
+        c = jax.lax.dynamic_index_in_dim(p, r, axis=1, keepdims=False)
+        gr = jax.lax.dynamic_index_in_dim(g, r, axis=1, keepdims=False)
+        want = nacc < k
+        onehot = (c[:, None] == experts[None, :]) & want[:, None]
+        oh = onehot.astype(jnp.float32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        mypos = jnp.sum(pos * oh, axis=1)
+        myload = jnp.sum(load[None, :] * oh, axis=1) + mypos
+        accept = want & (myload < capacity)
+        col = (jnp.arange(k)[None, :] == nacc[:, None]) & accept[:, None]
+        assign = jnp.where(col, c[:, None], assign)
+        slot = jnp.where(col, myload.astype(jnp.int32)[:, None], slot)
+        wts = jnp.where(col, gr[:, None], wts)
+        load = load + jnp.sum(oh * accept[:, None].astype(jnp.float32), axis=0)
+        return load, assign, slot, wts, nacc + accept.astype(jnp.int32)
+
+    load, assign, slot, wts, nacc = jax.lax.fori_loop(
+        0, D, rank_step, (load, assign, slot, wts, nacc))
+
+    denom = jnp.maximum(jnp.sum(wts, axis=-1, keepdims=True), 1e-9)
+    assign_ref[...] = assign
+    slot_ref[...] = slot
+    wts_ref[...] = wts / denom
+    load_ref[...] = load
+
+    @pl.when(b == n_blocks - 1)
+    def _flush():
+        loadout_ref[...] = load_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "k", "capacity",
+                                             "block", "interpret"))
+def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
+                k: int, capacity: int, block: int = 128,
+                interpret: bool = True):
+    """Capacity-bounded MoE assignment with CG overflow.
+
+    Args:
+      pref: [T, D] int32 — experts sorted by gate desc (D ≥ k; D−k is the
+        overflow probe depth).
+      gates: [T, D] f32 — matching gate probabilities.
+      capacity: per-expert buffer size C.
+    Returns (expert_assign [T,k], slot [T,k], weights [T,k], load [E]).
+    """
+    T, D = pref.shape
+    assert T % block == 0, f"{T} % {block} != 0"
+    n_blocks = T // block
+    kernel = functools.partial(_dispatch_kernel, n_experts=n_experts, k=k,
+                               capacity=capacity, block=block,
+                               n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block, D), lambda b: (b, 0)),
+            pl.BlockSpec((block, D), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, k), lambda b: (b, 0)),
+            pl.BlockSpec((block, k), lambda b: (b, 0)),
+            pl.BlockSpec((block, k), lambda b: (b, 0)),
+            pl.BlockSpec((n_experts,), lambda b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_experts,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_experts,), jnp.float32)],
+        interpret=interpret,
+    )(pref, gates)

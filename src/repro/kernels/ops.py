@@ -1,0 +1,39 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On TPU the kernels compile to Mosaic; everywhere else (this CPU
+container, unit tests) they run in interpret mode, which executes the
+kernel body with real JAX ops — same semantics, validated against the
+``ref`` oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cg_dispatch import cg_dispatch as _cg_dispatch
+from .porc_assign import porc_assign as _porc_assign
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
+                block: int = 128, eps: float = 0.05, m0: float = 0.0):
+    """Block-synchronous PoRC routing (paper Alg. 1, TPU-adapted)."""
+    return _porc_assign(keys, n_bins, d=d, block=block, eps=eps, m0=m0,
+                        interpret=not _on_tpu())
+
+
+def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
+                k: int, capacity: int, block: int = 128):
+    """Capacity-bounded MoE assignment with CG overflow."""
+    return _cg_dispatch(pref, gates, n_experts=n_experts, k=k,
+                        capacity=capacity, block=block,
+                        interpret=not _on_tpu())
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    """Mamba-2 SSD chunked scan."""
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: block-synchronous PoRC assignment (paper Alg. 1).
+
+TPU adaptation (DESIGN.md §2): the per-message probe loop is replaced by
+a rank-sequential / key-vectorized sweep over blocks of B keys. The load
+vector lives in **VMEM scratch** and is carried across the (sequential)
+TPU grid, so per block the only HBM traffic is B keys in / B assignments
+out — the kernel is compute-bound on the VPU one-hot cumsums and never
+re-reads loads from HBM.
+
+Semantics are bit-identical to ``ref.ref_porc_assign``.
+
+Grid: (M // block,), sequential. Scratch: load [n_bins] f32.
+Block shapes are (block,) for keys/assignments and the full [n_bins]
+load tail output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _mix32(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash_to_bins(key, salt, n_bins):
+    k = key.astype(jnp.uint32)
+    s = salt.astype(jnp.uint32)
+    h = _mix32(k + s * jnp.uint32(0x9E3779B9))
+    h = _mix32(h ^ (s * jnp.uint32(0x7F4A7C15) + jnp.uint32(0x165667B1)))
+    return (h % jnp.uint32(n_bins)).astype(jnp.int32)
+
+
+def _porc_kernel(m0_ref, keys_ref, assign_ref, loadout_ref, load_ref, *,
+                 n_bins: int, d: int, block: int, eps: float, n_blocks: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        load_ref[...] = jnp.zeros_like(load_ref)
+
+    keys = keys_ref[...]
+    load = load_ref[...]
+    cap = (1.0 + eps) * (m0_ref[0] + (b.astype(jnp.float32) + 1.0) * block) / n_bins
+
+    assign = jnp.full((block,), -1, jnp.int32)
+    unassigned = jnp.ones((block,), bool)
+    bins = jnp.arange(n_bins, dtype=jnp.int32)
+
+    def cond(carry):
+        r, load, assign, unassigned = carry
+        return (r < d) & jnp.any(unassigned)
+
+    def rank_step(carry):
+        r, load, assign, unassigned = carry
+        c = _hash_to_bins(keys, (r + 1).astype(jnp.uint32), n_bins)
+        onehot = (c[:, None] == bins[None, :]) & unassigned[:, None]
+        oh = onehot.astype(jnp.float32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        mypos = jnp.sum(pos * oh, axis=1)      # pos at own bin (one-hot select)
+        myload = jnp.sum(load[None, :] * oh, axis=1)
+        accept = unassigned & (myload + mypos < cap)
+        assign = jnp.where(accept, c, assign)
+        load = load + jnp.sum(oh * accept[:, None].astype(jnp.float32), axis=0)
+        return r + 1, load, assign, unassigned & ~accept
+
+    _, load, assign, unassigned = jax.lax.while_loop(
+        cond, rank_step, (jnp.int32(0), load, assign, unassigned))
+
+    # forced fallback at probe ceiling: round-robin over least-loaded bins
+    order = jnp.argsort(load).astype(jnp.int32)
+    leftpos = jnp.cumsum(unassigned.astype(jnp.int32)) - 1
+    fallback = order[leftpos % n_bins]
+    assign = jnp.where(unassigned, fallback, assign)
+    forced = (fallback[:, None] == bins[None, :]) & unassigned[:, None]
+    load = load + jnp.sum(forced.astype(jnp.float32), axis=0)
+
+    assign_ref[...] = assign
+    load_ref[...] = load
+
+    @pl.when(b == n_blocks - 1)
+    def _flush():
+        loadout_ref[...] = load_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_bins", "d", "block", "eps", "interpret"))
+def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
+                block: int = 128, eps: float = 0.05, m0: float = 0.0,
+                interpret: bool = True):
+    """Block-synchronous PoRC over a key stream.
+
+    Args:
+      keys: [M] int32, M a multiple of ``block``.
+      n_bins: virtual workers.
+      d: probe depth (salted hash choices per key).
+      eps: capacity slack — bin capacity is (1+eps)·m_t/n_bins.
+      m0: messages already routed before this call (continuation).
+    Returns (assignment [M] int32, final_load [n_bins] f32).
+    """
+    if d is None:
+        d = 4 * n_bins      # same probe ceiling as the sequential oracle
+    M = keys.shape[0]
+    assert M % block == 0, f"{M} % {block} != 0"
+    n_blocks = M // block
+    kernel = functools.partial(_porc_kernel, n_bins=n_bins, d=d, block=block,
+                               eps=eps, n_blocks=n_blocks)
+    m0_arr = jnp.asarray([m0], jnp.float32)
+    assign, load = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((n_bins,), lambda b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_bins,), jnp.float32)],
+        interpret=interpret,
+    )(m0_arr, keys)
+    return assign, load

@@ -1,0 +1,192 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth the kernels are tested against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes and asserts
+equality / allclose).
+
+Oracles
+-------
+ref_porc_assign   block-synchronous PoRC (the TPU-adapted Alg. 1)
+ref_cg_dispatch   capacity-bounded MoE assignment with CG overflow
+ref_ssd_scan      Mamba-2 SSD recurrence (exact sequential scan)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_to_bins
+
+
+# ---------------------------------------------------------------------------
+# PoRC, block-synchronous semantics
+# ---------------------------------------------------------------------------
+
+def _porc_block(load, keys, cap, n_bins: int, d: int):
+    """Assign one block of keys against running loads.
+
+    Rank-sequential, key-vectorized: at rank r, every still-unassigned
+    key bids for its r-th salted choice H(key‖r+1); the first
+    ``cap − load`` bidders per bin (in block order) are accepted.
+    Ranks advance until every key is placed (Alg. 1's unbounded probe),
+    with a ceiling of d ranks; the rare leftovers are forced onto their
+    rank-d choice.
+    """
+    B = keys.shape[0]
+    assign = jnp.full((B,), -1, jnp.int32)
+    unassigned = jnp.ones((B,), bool)
+
+    def cond(carry):
+        r, load, assign, unassigned = carry
+        return (r < d) & jnp.any(unassigned)
+
+    def rank_step(carry):
+        r, load, assign, unassigned = carry
+        c = hash_to_bins(keys, (r + 1).astype(jnp.uint32), n_bins)
+        onehot = (c[:, None] == jnp.arange(n_bins)[None, :]) & unassigned[:, None]
+        pos = jnp.cumsum(onehot.astype(jnp.float32), axis=0) - onehot
+        mypos = jnp.take_along_axis(pos, c[:, None], axis=1)[:, 0]
+        accept = unassigned & (load[c] + mypos < cap)
+        assign = jnp.where(accept, c, assign)
+        load = load + jnp.sum(
+            onehot.astype(jnp.float32) * accept[:, None].astype(jnp.float32), axis=0)
+        return r + 1, load, assign, unassigned & ~accept
+
+    _, load, assign, unassigned = jax.lax.while_loop(
+        cond, rank_step, (jnp.int32(0), load, assign, unassigned))
+    # forced fallback at probe ceiling: spread leftovers round-robin over
+    # the least-loaded bins (the vectorized analogue of Alg. 1's
+    # argmin-load fallback; prevents pileup on any single bin).
+    order = jnp.argsort(load).astype(jnp.int32)
+    leftpos = jnp.cumsum(unassigned.astype(jnp.int32)) - 1
+    fallback = order[leftpos % n_bins]
+    assign = jnp.where(unassigned, fallback, assign)
+    forced = jnp.zeros((n_bins,), jnp.float32).at[fallback].add(
+        unassigned.astype(jnp.float32))
+    return load + forced, assign
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "d", "block", "eps"))
+def ref_porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
+                    block: int = 128, eps: float = 0.05,
+                    load0: jnp.ndarray | None = None,
+                    m0: float = 0.0):
+    """Oracle for kernels.porc_assign. keys length must be a multiple of
+    ``block``. Returns (assignment [M], final load [n_bins])."""
+    if d is None:
+        d = 4 * n_bins      # same probe ceiling as the sequential oracle
+    M = keys.shape[0]
+    assert M % block == 0
+    nb = M // block
+    kb = keys.reshape(nb, block)
+    load = jnp.zeros(n_bins, jnp.float32) if load0 is None else load0
+
+    def blk(load, xs):
+        b, keys_blk = xs
+        cap = (1.0 + eps) * (m0 + (b + 1.0) * block) / n_bins
+        load, assign = _porc_block(load, keys_blk, cap, n_bins, d)
+        return load, assign
+
+    load, assign = jax.lax.scan(blk, load,
+                                (jnp.arange(nb, dtype=jnp.float32), kb))
+    return assign.reshape(-1), load
+
+
+# ---------------------------------------------------------------------------
+# CG MoE dispatch
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "k", "capacity", "block"))
+def ref_cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
+                    k: int, capacity: int, block: int = 128):
+    """Oracle for kernels.cg_dispatch.
+
+    Args:
+      pref: [T, D] experts per token sorted by gate desc (D ≥ k gives the
+        overflow depth — the PoRC salted-probe sequence analogue).
+      gates: [T, D] matching gate scores (softmax probs).
+    Returns:
+      expert_assign [T, k] int32 (-1 = unplaced), slot [T, k] int32
+      (position in the expert's buffer), weights [T, k] f32 (renormalized
+      over placed slots), load [E] f32 final per-expert occupancy.
+    """
+    T, D = pref.shape
+    assert T % block == 0
+
+    def blk(load, xs):
+        p, g = xs                                            # [B, D]
+        B = p.shape[0]
+        assign = jnp.full((B, k), -1, jnp.int32)
+        slot = jnp.full((B, k), -1, jnp.int32)
+        wts = jnp.zeros((B, k), jnp.float32)
+        nacc = jnp.zeros((B,), jnp.int32)
+
+        def rank_step(r, carry):
+            load, assign, slot, wts, nacc = carry
+            c = p[:, r]
+            want = nacc < k
+            onehot = (c[:, None] == jnp.arange(n_experts)[None, :]) & want[:, None]
+            pos = jnp.cumsum(onehot.astype(jnp.float32), axis=0) - onehot
+            mypos = jnp.take_along_axis(pos, c[:, None], axis=1)[:, 0]
+            myload = load[c] + mypos
+            accept = want & (myload < capacity)
+            col = (jnp.arange(k)[None, :] == nacc[:, None]) & accept[:, None]
+            assign = jnp.where(col, c[:, None], assign)
+            slot = jnp.where(col, myload.astype(jnp.int32)[:, None], slot)
+            wts = jnp.where(col, g[:, r][:, None], wts)
+            load = load + jnp.sum(
+                onehot.astype(jnp.float32) * accept[:, None], axis=0)
+            return load, assign, slot, wts, nacc + accept.astype(jnp.int32)
+
+        load, assign, slot, wts, nacc = jax.lax.fori_loop(
+            0, D, rank_step, (load, assign, slot, wts, nacc))
+        denom = jnp.maximum(jnp.sum(wts, -1, keepdims=True), 1e-9)
+        return load, (assign, slot, wts / denom)
+
+    load0 = jnp.zeros((n_experts,), jnp.float32)
+    load, (assign, slot, wts) = jax.lax.scan(
+        blk, load0, (pref.reshape(-1, block, D), gates.reshape(-1, block, D)))
+    return (assign.reshape(T, k), slot.reshape(T, k),
+            wts.reshape(T, k), load)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def ref_ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Exact sequential SSD recurrence (the gold semantics).
+
+    h_t = exp(dt_t·A_h)·h_{t-1} + dt_t·(x_t ⊗ B_t);  y_t = h_t·C_t
+
+    Args:
+      x:  [B, L, H, P] inputs per head.
+      dt: [B, L, H] positive step sizes.
+      A:  [H] negative decay rates.
+      Bm: [B, L, G, N] input projections (G groups, H % G == 0).
+      Cm: [B, L, G, N] output projections.
+    Returns y: [B, L, H, P].
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)                         # [B, L, H, N]
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs                                  # [B,H,P],[B,H],[B,H,N]x2
+        decay = jnp.exp(dtt * A[None, :])[..., None, None]    # [B,H,1,1]
+        h = decay * h + (dtt[..., None] * xt)[..., None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Ch, 1, 0).astype(jnp.float32))
+    _, y = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(y, 0, 1).astype(x.dtype)

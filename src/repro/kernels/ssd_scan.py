@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the sequence is
+split into chunks of Q steps. Within a chunk everything is dense
+matmul (MXU): the masked-decay "attention" matrix (C·Bᵀ)⊙exp(sᵢ−sⱼ) and
+its product with X. Across chunks, the [P, N] state is carried in VMEM
+scratch over the sequential chunk axis of the grid — never touching HBM.
+
+Grid: (B·H, L//Q) — rows parallel, chunks sequential (row-major grid).
+Semantics match ``ref.ref_ssd_scan`` (exact sequential recurrence) to
+float tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                n_heads: int, chunk: int):
+    bh = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[bh % n_heads]                       # scalar decay rate (<0)
+    x = x_ref[0, 0].astype(jnp.float32)           # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)         # [Q]
+    bm = b_ref[0, 0].astype(jnp.float32)          # [Q, N]
+    cm = c_ref[0, 0].astype(jnp.float32)          # [Q, N]
+    h0 = h_ref[...]                               # [P, N]
+
+    da = dt * a                                   # [Q], ≤ 0
+    s = jnp.cumsum(da)                            # inclusive
+
+    # intra-chunk: y_i += Σ_{j≤i} e^{s_i−s_j}·dt_j·(C_i·B_j)·x_j
+    g = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # [Q, Q]
+    diff = s[:, None] - s[None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+    w = w * g * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)       # [Q, P]
+
+    # inter-chunk: y_i += e^{s_i}·(C_i · h0ᵀ)
+    y = y + jnp.exp(s)[:, None] * jnp.dot(
+        cm, h0.T, preferred_element_type=jnp.float32)           # [Q, P]
+
+    # state carry: h' = e^{s_Q}·h0 + Σ_j e^{s_Q−s_j}·dt_j·(x_j ⊗ B_j)
+    coef = dt * jnp.exp(s[-1] - s)                              # [Q]
+    h_new = jnp.exp(s[-1]) * h0 + jnp.dot(
+        (x * coef[:, None]).T, bm, preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    h_ref[...] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = True) -> jnp.ndarray:
+    """Chunked SSD scan. Same signature/semantics as ref.ref_ssd_scan.
+
+    Args:
+      x:  [B, L, H, P]; dt: [B, L, H]; A: [H] (negative);
+      Bm/Cm: [B, L, G, N] with H % G == 0.
+    Returns y: [B, L, H, P].
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, f"L={L} % chunk={chunk} != 0"
+    assert H % G == 0
+    nc = L // chunk
+    rep = H // G
+
+    xt = jnp.moveaxis(x, 2, 1)                     # [B, H, L, P]
+    dtt = jnp.moveaxis(dt, 2, 1)                   # [B, H, L]
+    bt = jnp.moveaxis(Bm, 2, 1)                    # [B, G, L, N]
+    ct = jnp.moveaxis(Cm, 2, 1)
+
+    kernel = functools.partial(_ssd_kernel, n_heads=H, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bsz * H, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                       # A [H]
+            pl.BlockSpec((1, 1, chunk, P),
+                         lambda bh, c, H=H: (bh // H, bh % H, c, 0)),
+            pl.BlockSpec((1, 1, chunk),
+                         lambda bh, c, H=H: (bh // H, bh % H, c)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, c, H=H, rep=rep: (bh // H, (bh % H) // rep, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, c, H=H, rep=rep: (bh // H, (bh % H) // rep, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda bh, c, H=H: (bh // H, bh % H, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), xt, dtt, bt, ct)
+    return jnp.moveaxis(y, 1, 2)                   # [B, L, H, P]

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, dry-run, train and serve drivers.
+
+Deliberately empty of imports: ``dryrun`` must own first-import of jax
+(it sets --xla_force_host_platform_device_count before jax initializes,
+and ``python -m repro.launch.dryrun`` executes this package __init__
+first). Import submodules explicitly: ``from repro.launch import mesh``.
+"""

@@ -1,0 +1,4 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM families."""
+from . import model_zoo  # noqa: F401
+from .model_zoo import (cache_spec, count_params, decode_step,  # noqa: F401
+                        init_cache, init_params, input_specs, loss_fn)

@@ -1,0 +1,227 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Per the assignment spec, the conv frontend is a **stub**: the model
+consumes precomputed frame embeddings [B, S_enc, d_model] directly
+(``input_specs`` provides them). Encoder: bidirectional self-attention;
+decoder: causal self-attention + cross-attention. LayerNorm + GELU MLP +
+biases, per the Whisper architecture; RoPE replaces learned positional
+embeddings (TPU-idiomatic adaptation, DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention, attn_params, decode_attention,
+                     dense_init, gelu_mlp, linear, shard_act)
+from .lm_common import (chunked_xent, embed_tokens, last_logits, norm,
+                        norm_params, pad_cache_seq, shift_labels,
+                        update_kv_cache)
+from .transformer import _remat
+
+
+def _gelu_mlp_params(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"w1": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+            "b1": jnp.zeros((cfg.d_ff,), dtype),
+            "w2": dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype),
+            "b2": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"attn_norm": norm_params(cfg, dtype),
+            "attn": attn_params(ks[0], cfg, dtype),
+            "mlp_norm": norm_params(cfg, dtype),
+            "mlp": _gelu_mlp_params(ks[1], cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"self_norm": norm_params(cfg, dtype),
+            "self_attn": attn_params(ks[0], cfg, dtype),
+            "cross_norm": norm_params(cfg, dtype),
+            "cross_attn": attn_params(ks[1], cfg, dtype),
+            "mlp_norm": norm_params(cfg, dtype),
+            "mlp": _gelu_mlp_params(ks[2], cfg, dtype)}
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_enc, k_dec = jax.random.split(key, 3)
+    return {
+        "embed": dense_init(k_e, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            jax.random.split(k_enc, cfg.n_enc_layers)),
+        "enc_norm": norm_params(cfg, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            jax.random.split(k_dec, cfg.n_layers)),
+        "final_norm": norm_params(cfg, dtype),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: [B, S_enc, D] stub embeddings → encoder memory."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+
+    def body(x, lp):
+        h = attention(norm(x, lp["attn_norm"], cfg), lp["attn"], cfg,
+                      positions=positions, causal=False)
+        x = x + h
+        x = x + gelu_mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"])
+        return shard_act(x, "btd"), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return norm(x, params["enc_norm"], cfg)
+
+
+def decode_train(params, cfg, tokens, memory):
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    B, Sm = memory.shape[0], memory.shape[1]
+
+    def body(x, lp):
+        h = attention(norm(x, lp["self_norm"], cfg), lp["self_attn"], cfg,
+                      positions=positions, causal=True)
+        x = x + h
+        mk = linear(memory, lp["cross_attn"]["wk"],
+                    lp["cross_attn"].get("bk")).reshape(B, Sm, KV, Dh)
+        mv = linear(memory, lp["cross_attn"]["wv"],
+                    lp["cross_attn"].get("bv")).reshape(B, Sm, KV, Dh)
+        h = attention(norm(x, lp["cross_norm"], cfg), lp["cross_attn"], cfg,
+                      positions=positions, causal=False, kv_override=(mk, mv))
+        x = x + h
+        x = x + gelu_mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"])
+        return shard_act(x, "btd"), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return norm(x, params["final_norm"], cfg)
+
+
+def loss_fn(params, cfg, batch):
+    """batch: {"frames": [B, S_enc, D], "tokens": [B, S_dec]}."""
+    memory = encode(params, cfg, batch["frames"])
+    x = decode_train(params, cfg, batch["tokens"], memory)
+    return chunked_xent(x, params["embed"], shift_labels(batch["tokens"]))
+
+
+def prefill_step(params, cfg, batch, pad_to: int | None = None):
+    """Prefill: encode frames, prime cross KV, run the decoder prompt
+    collecting self-KV → (last logits, cache)."""
+    memory = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    B, S = tokens.shape
+    Sm = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+
+    def body(x, lp):
+        h, kv = attention(norm(x, lp["self_norm"], cfg), lp["self_attn"],
+                          cfg, positions=positions, causal=True,
+                          return_kv=True)
+        x = x + h
+        mk = linear(memory, lp["cross_attn"]["wk"],
+                    lp["cross_attn"].get("bk")).reshape(B, Sm, KV, Dh)
+        mv = linear(memory, lp["cross_attn"]["wv"],
+                    lp["cross_attn"].get("bv")).reshape(B, Sm, KV, Dh)
+        h = attention(norm(x, lp["cross_norm"], cfg), lp["cross_attn"], cfg,
+                      positions=positions, causal=False, kv_override=(mk, mv))
+        x = x + h
+        x = x + gelu_mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"])
+        return shard_act(x, "btd"), (kv[0], kv[1], mk, mv)
+
+    body = _remat(body, cfg)
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = norm(x, params["final_norm"], cfg)
+    logits = last_logits(x[:, -1], params["embed"])
+    dtype = jnp.dtype(cfg.dtype)
+    return logits, {"k": pad_cache_seq(k.astype(dtype), pad_to),
+                    "v": pad_cache_seq(v.astype(dtype), pad_to),
+                    "cross_k": ck.astype(dtype), "cross_v": cv.astype(dtype),
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode: self KV cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int, enc_len: int | None = None):
+    enc_len = enc_len or max_len
+    dtype = jnp.dtype(cfg.dtype)
+    L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, KV, Dh), dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, KV, Dh), dtype),
+        "cross_k": jax.ShapeDtypeStruct((L, batch, enc_len, KV, Dh), dtype),
+        "cross_v": jax.ShapeDtypeStruct((L, batch, enc_len, KV, Dh), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int | None = None):
+    return jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype),
+                        cache_spec(cfg, batch, max_len, enc_len))
+
+
+def prime_cross_cache(params, cfg, cache, memory):
+    """Precompute per-layer cross K/V from encoder memory."""
+    B, Sm = memory.shape[0], memory.shape[1]
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+
+    def per_layer(lp):
+        mk = linear(memory, lp["cross_attn"]["wk"],
+                    lp["cross_attn"].get("bk")).reshape(B, Sm, KV, Dh)
+        mv = linear(memory, lp["cross_attn"]["wv"],
+                    lp["cross_attn"].get("bv")).reshape(B, Sm, KV, Dh)
+        return mk, mv
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return {**cache, "cross_k": ck.astype(cache["cross_k"].dtype),
+            "cross_v": cv.astype(cache["cross_v"].dtype)}
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    enc_len = cache["cross_k"].shape[2]
+
+    def body(x, xs):
+        lp, kc, vc, ck, cv = xs
+        xa = norm(x, lp["self_norm"], cfg)
+        q = linear(xa, lp["self_attn"]["wq"], lp["self_attn"].get("bq")).reshape(B, 1, H, Dh)
+        k = linear(xa, lp["self_attn"]["wk"], lp["self_attn"].get("bk")).reshape(B, 1, KV, Dh)
+        v = linear(xa, lp["self_attn"]["wv"], lp["self_attn"].get("bv")).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        from .sp_decode import seqpar_update_and_attend
+        out, kc, vc = seqpar_update_and_attend(q, kc, vc, k, v, pos)
+        x = x + linear(out.reshape(B, 1, H * Dh), lp["self_attn"]["wo"],
+                       lp["self_attn"].get("bo"))
+        xa = norm(x, lp["cross_norm"], cfg)
+        q = linear(xa, lp["cross_attn"]["wq"], lp["cross_attn"].get("bq")).reshape(B, 1, H, Dh)
+        from .sp_decode import seqpar_attend
+        out = seqpar_attend(q, ck, cv, enc_len)
+        x = x + linear(out.reshape(B, 1, H * Dh), lp["cross_attn"]["wo"],
+                       lp["cross_attn"].get("bo"))
+        x = x + gelu_mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"])
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = norm(x, params["final_norm"], cfg)
+    return last_logits(x[:, 0], params["embed"]), {
+        **cache, "k": k_new, "v": v_new, "pos": pos + 1}

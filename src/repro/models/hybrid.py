@@ -1,0 +1,182 @@
+"""Zamba-2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The shared transformer block (single weight set) is applied after every
+``shared_attn_every`` SSM layers — zamba2-2.7b: 54 Mamba-2 layers in 9
+groups of 6, 9 invocations of the shared block. Each invocation has its
+own KV cache at decode time (different depths see different streams).
+
+Simplifications vs. the released checkpoint (DESIGN.md §9): no per-
+invocation LoRA deltas on the shared block and plain residual (no
+concat-with-embedding) — dims and FLOP structure match the config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention, attn_params, decode_attention,
+                     dense_init, linear, mlp_params, shard_act, swiglu_mlp)
+from .lm_common import (chunked_xent, embed_tokens, last_logits, norm,
+                        norm_params, pad_cache_seq, shift_labels,
+                        update_kv_cache)
+from .mamba2 import _layer_init as _mamba_layer_init
+from .mamba2 import _dims, mamba_block, mamba_step
+from .transformer import _remat
+
+
+def _n_groups(cfg):
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_l, k_s = jax.random.split(key, 3)
+    n_g, k_per = _n_groups(cfg), cfg.shared_attn_every
+    layers = jax.vmap(lambda k: _mamba_layer_init(k, cfg, dtype))(
+        jax.random.split(k_l, cfg.n_layers))
+    # reshape stacked leaves to [n_groups, per_group, ...]
+    layers = jax.tree.map(
+        lambda a: a.reshape(n_g, k_per, *a.shape[1:]), layers)
+    ks = jax.random.split(k_s, 2)
+    shared = {
+        "attn_norm": norm_params(cfg, dtype),
+        "attn": attn_params(ks[0], cfg, dtype),
+        "mlp_norm": norm_params(cfg, dtype),
+        "mlp": mlp_params(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": dense_init(k_e, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": norm_params(cfg, dtype),
+    }
+
+
+def hidden_states(params, cfg, x, positions):
+    shared = params["shared"]
+
+    def group_body(x, glp):
+        def inner(x, lp):
+            x = x + mamba_block(norm(x, lp["norm"], cfg), lp, cfg)
+            return shard_act(x, "btd"), None
+
+        x, _ = jax.lax.scan(inner, x, glp)
+        h = attention(norm(x, shared["attn_norm"], cfg), shared["attn"], cfg,
+                      positions=positions, causal=True)
+        x = x + h
+        x = x + swiglu_mlp(norm(x, shared["mlp_norm"], cfg), shared["mlp"])
+        return shard_act(x, "btd"), None
+
+    group_body = _remat(group_body, cfg)
+    x, _ = jax.lax.scan(group_body, x, params["layers"])
+    return norm(x, params["final_norm"], cfg)
+
+
+def loss_fn(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    x = hidden_states(params, cfg, x, positions)
+    return chunked_xent(x, params["embed"], shift_labels(tokens))
+
+
+def prefill_step(params, cfg, batch, pad_to: int | None = None):
+    """Prefill → (last logits, cache): O(1) SSM states + per-invocation
+    KV caches for the shared attention block."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    shared = params["shared"]
+
+    def group_body(x, glp):
+        def inner(x, lp):
+            y, (conv, h) = mamba_block(norm(x, lp["norm"], cfg), lp, cfg,
+                                       return_state=True)
+            return shard_act(x + y, "btd"), (conv, h)
+
+        x, (conv, h) = jax.lax.scan(inner, x, glp)
+        out, (k, v) = attention(norm(x, shared["attn_norm"], cfg),
+                                shared["attn"], cfg, positions=positions,
+                                causal=True, return_kv=True)
+        x = x + out
+        x = x + swiglu_mlp(norm(x, shared["mlp_norm"], cfg), shared["mlp"])
+        return shard_act(x, "btd"), (conv, h, k, v)
+
+    group_body = _remat(group_body, cfg)
+    x, (conv, h, k, v) = jax.lax.scan(group_body, x, params["layers"])
+    x = norm(x, params["final_norm"], cfg)
+    logits = last_logits(x[:, -1], params["embed"])
+    dtype = jnp.dtype(cfg.dtype)
+    return logits, {"conv": conv.astype(dtype), "h": h,
+                    "k": pad_cache_seq(k.astype(dtype), pad_to),
+                    "v": pad_cache_seq(v.astype(dtype), pad_to),
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int):
+    s, d_in, H, d_xbc = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    n_g, k_per = _n_groups(cfg), cfg.shared_attn_every
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (n_g, k_per, batch, s.d_conv - 1, d_xbc), dtype),
+        "h": jax.ShapeDtypeStruct(
+            (n_g, k_per, batch, H, s.head_dim, s.d_state), jnp.float32),
+        "k": jax.ShapeDtypeStruct(
+            (n_g, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jax.ShapeDtypeStruct(
+            (n_g, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)[:, 0]   # [B, D]
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    shared = params["shared"]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def group_body(x, xs):
+        glp, conv, h, kc, vc = xs
+
+        def inner(x, ys):
+            lp, cs, hs = ys
+            y, cs, hs = mamba_step(norm(x, lp["norm"], cfg), lp, cfg, cs, hs)
+            return x + y, (cs, hs)
+
+        x, (conv, h) = jax.lax.scan(inner, x, (glp, conv, h))
+        xa = norm(x[:, None], shared["attn_norm"], cfg)
+        q = linear(xa, shared["attn"]["wq"]).reshape(B, 1, H, Dh)
+        k = linear(xa, shared["attn"]["wk"]).reshape(B, 1, KV, Dh)
+        v = linear(xa, shared["attn"]["wv"]).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        from .sp_decode import seqpar_update_and_attend
+        out, kc, vc = seqpar_update_and_attend(
+            q[:, :], kc, vc, k, v, pos)
+        x = x + linear(out.reshape(B, H * Dh), shared["attn"]["wo"])
+        x = x + swiglu_mlp(norm(x, shared["mlp_norm"], cfg), shared["mlp"])
+        return x, (conv, h, kc, vc)
+
+    x, (conv_n, h_n, k_n, v_n) = jax.lax.scan(
+        group_body, x,
+        (params["layers"], cache["conv"], cache["h"], cache["k"], cache["v"]))
+    x = norm(x, params["final_norm"], cfg)
+    return last_logits(x, params["embed"]), {
+        "conv": conv_n, "h": h_n, "k": k_n, "v": v_n, "pos": pos + 1}

@@ -1,0 +1,465 @@
+"""Shared neural building blocks (pure-function style, param pytrees).
+
+Everything here is mesh-agnostic; the launcher installs activation
+sharding rules through ``set_act_sharding`` and the layers call
+``shard_act`` at the canonical cut points. With no rules installed the
+calls are identity (single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (installed by repro.launch)
+# ---------------------------------------------------------------------------
+
+_ACT_RULES: dict[str, object] = {}
+
+
+def set_act_sharding(rules: dict[str, object]) -> None:
+    """Install {kind: PartitionSpec} activation constraints (launcher)."""
+    global _ACT_RULES
+    _ACT_RULES = dict(rules)
+
+
+@contextlib.contextmanager
+def act_sharding(rules: dict[str, object]):
+    global _ACT_RULES
+    old = _ACT_RULES
+    _ACT_RULES = dict(rules)
+    try:
+        yield
+    finally:
+        _ACT_RULES = old
+
+
+def shard_act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    spec = _ACT_RULES.get(kind)
+    if spec is None:
+        return x
+    mesh = _ACT_RULES.get("_mesh")
+    if mesh is None:
+        return x
+    # drop axes that do not divide the actual dim (e.g. batch=1 cells)
+    def ax_size(axes):
+        n = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            n *= mesh.shape[a]
+        return n
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    fixed = [axes if (axes is not None and d % ax_size(axes) == 0
+                      and d >= ax_size(axes)) else None
+             for d, axes in zip(x.shape, tuple(spec) + (None,) * x.ndim)]
+    # NamedSharding carries its mesh — no ambient mesh context required
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Norms — custom VJPs that keep residuals in the model dtype.
+#
+# Without these, XLA stores the layer-scan's saved residual stream in
+# f32 (the norm backward's first use of x is an f32 convert, so the
+# convert gets folded into the save) — 2× activation memory at 100B
+# scale. The custom bwd takes bf16 residuals and upcasts per-slice.
+# ---------------------------------------------------------------------------
+
+_RMS_EPS = 1e-6
+_LN_EPS = 1e-5
+
+
+@jax.custom_vjp
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + _RMS_EPS) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _rms_fwd(x, scale):
+    return rmsnorm(x, scale), (x, scale)
+
+
+def _rms_bwd(res, g):
+    x, scale = res
+    # barrier: keeps XLA from commuting this convert past the bwd loop's
+    # slice and materializing an f32 copy of the whole saved-carry stack
+    x = jax.lax.optimization_barrier(x)
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + _RMS_EPS)
+    s = 1.0 + scale.astype(jnp.float32)
+    gs = gf * s
+    dx = r * gs - xf * (r ** 3 / d) * jnp.sum(gs * xf, -1, keepdims=True)
+    dscale = jnp.sum(gf * xf * r,
+                     axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)
+
+
+@jax.custom_vjp
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray,
+              bias: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + _LN_EPS)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _ln_fwd(x, scale, bias):
+    return layernorm(x, scale, bias), (x, scale)
+
+
+def _ln_bwd(res, g):
+    x, scale = res
+    x = jax.lax.optimization_barrier(x)
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + _LN_EPS)
+    xhat = (xf - mu) * r
+    gs = gf * scale.astype(jnp.float32)
+    dx = r * (gs - jnp.mean(gs, -1, keepdims=True)
+              - xhat * jnp.mean(gs * xhat, -1, keepdims=True))
+    axes = tuple(range(x.ndim - 1))
+    return (dx.astype(x.dtype), jnp.sum(gf * xhat, axes).astype(scale.dtype),
+            jnp.sum(gf, axes).astype(scale.dtype))
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: [..., S] int32."""
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                    # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG = jnp.float32(-1e30)
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, KV, Dh] -> [B, S, H, Dh] by group repeat."""
+    rep = n_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int | None = None,
+                    q_offset: int = 0, window_flag=None) -> jnp.ndarray:
+    """Materialized-scores attention for short sequences.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Sk, KV, Dh]. Returns [B, Sq, H, Dh].
+    ``window_flag``: optional traced bool — when False the window mask is
+    disabled at runtime (gemma3 local/global interleave inside scan).
+    """
+    H = q.shape[2]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    iq = jnp.arange(q.shape[1])[:, None] + q_offset
+    jk = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask = mask & (iq >= jk)
+    if window is not None:
+        wmask = jk > iq - window
+        if window_flag is not None:
+            wmask = wmask | ~window_flag
+        mask = mask & wmask
+    s = jnp.where(mask[None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+@partial(jax.checkpoint, static_argnums=(4, 5, 6, 7, 8))
+def _chunked_attn_body(q, k, v, window_flag, causal, window, q_chunk,
+                       kv_chunk, q_offset):
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    qs = q.reshape(B, nq, q_chunk, H, Dh)
+    ks = k.reshape(B, nk, kv_chunk, H, Dh)
+    vs = v.reshape(B, nk, kv_chunk, H, Dh)
+
+    def q_step(_, qi):
+        qc, iq_blk = qi                                   # [B, qc, H, Dh]
+        qpos = q_offset + iq_blk * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint   # flash-style bwd: recompute scores per kv chunk
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, jk_blk = ki
+            kpos = jk_blk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                wmask = kpos[None, :] > qpos[:, None] - window
+                if window_flag is not None:
+                    wmask = wmask | ~window_flag
+                mask = mask & wmask
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # [B, H, qc, Dh]
+        return None, jnp.moveaxis(out, 1, 2)              # [B, qc, H, Dh]
+
+    _, out = jax.lax.scan(q_step, None,
+                          (jnp.moveaxis(qs, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int | None = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      q_offset: int = 0, window_flag=None) -> jnp.ndarray:
+    """Online-softmax attention scanned over q and kv chunks.
+
+    Keeps the S² score matrix out of live memory (flash-attention
+    schedule, TPU-adapted as jnp-on-MXU). Causal self-attention takes
+    the *triangular* schedule: q-chunk i attends only its first i+1 kv
+    chunks (statically bounded per chunk → reverse-differentiable),
+    halving attention FLOPs vs the rectangular sweep (§Perf H1).
+    """
+    if causal and q_offset == 0 and q.shape[1] == k.shape[1]:
+        return _chunked_attn_tri(q, k, v, window_flag, window, q_chunk,
+                                 kv_chunk)
+    return _chunked_attn_body(q, k, v, window_flag, causal, window, q_chunk,
+                              kv_chunk, q_offset)
+
+
+@partial(jax.checkpoint, static_argnums=(4, 5, 6))
+def _chunked_attn_tri(q, k, v, window_flag, window, q_chunk, kv_chunk):
+    """Triangular causal schedule: per q chunk, scan exactly the causal
+    kv-chunk prefix. Static bounds per (python-unrolled) q chunk.
+
+    When ``window`` is static for every layer (window_flag is None), kv
+    chunks entirely below the window are skipped statically too.
+    """
+    B, Sq, H, Dh = q.shape
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sq)
+    nq, nk = Sq // q_chunk, Sq // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    ks = k.reshape(B, nk, kv_chunk, H, Dh)
+    vs = v.reshape(B, nk, kv_chunk, H, Dh)
+    outs = []
+    for i in range(nq):
+        qc = q[:, i * q_chunk:(i + 1) * q_chunk]
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        hi = (i + 1) * q_chunk
+        hi_blk = -(-hi // kv_chunk)                  # ceil
+        lo_blk = 0
+        if window is not None and window_flag is None:
+            lo_blk = max(0, (hi - q_chunk - window) // kv_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc, vc, jb = kj
+            kpos = jb * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            mask = qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                wmask = kpos[None, :] > qpos[:, None] - window
+                if window_flag is not None:
+                    wmask = wmask | ~window_flag
+                mask = mask & wmask
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), _NEG)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        sel = jnp.arange(lo_blk, hi_blk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(ks[:, lo_blk:hi_blk], 1, 0),
+             jnp.moveaxis(vs[:, lo_blk:hi_blk], 1, 0), sel))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.moveaxis(out, 1, 2))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, lo_idx=None) -> jnp.ndarray:
+    """Single-position attention against a (padded) KV cache.
+
+    q: [B, 1, H, Dh]; caches: [B, S, KV, Dh]; valid_len: [] current length
+    (entries at position ≥ valid_len are masked). ``lo_idx``: optional []
+    lower bound — entries below it are masked (sliding window decode).
+    """
+    H = q.shape[2]
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(k.shape[1])[None, None, None, :]
+    mask = idx < valid_len
+    if lo_idx is not None:
+        mask = mask & (idx >= lo_idx)
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Projections / MLP
+# ---------------------------------------------------------------------------
+
+def linear(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def swiglu_mlp(x, p):
+    """LLaMA-style gated MLP: w1 (gate), w3 (up), w2 (down)."""
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = shard_act(h, "btf")
+    return h @ p["w2"]
+
+
+def gelu_mlp(x, p):
+    """2-matrix GELU MLP (whisper)."""
+    h = jax.nn.gelu(x @ p["w1"] + p.get("b1", 0.0))
+    return h @ p["w2"] + p.get("b2", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def attn_params(key, cfg, dtype):
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * Dh), dtype),
+        "wk": dense_init(ks[1], (d, KV * Dh), dtype),
+        "wv": dense_init(ks[2], (d, KV * Dh), dtype),
+        "wo": dense_init(ks[3], (H * Dh, d), dtype),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((KV * Dh,), dtype)
+        p["bv"] = jnp.zeros((KV * Dh,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_params(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w3": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w2": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def attention(x, p, cfg, *, positions, causal=True, window=None,
+              kv_override=None, window_flag=None, return_kv=False):
+    """Full attention sub-layer: proj → rope → attend → out-proj.
+
+    kv_override: (k, v) precomputed (cross-attention; no RoPE applied).
+    window_flag: traced bool enabling the sliding window per layer.
+    return_kv: also return the (roped) k/v for KV-cache priming.
+    Returns output [B, S, D] (or (out, (k, v))).
+    """
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, Dh)
+    if kv_override is None:
+        k = linear(x, p["wk"], p.get("bk")).reshape(B, S, KV, Dh)
+        v = linear(x, p["wv"], p.get("bv")).reshape(B, S, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = shard_act(q, "bshd")
+    k = shard_act(k, "bskd")
+    v = shard_act(v, "bskd")
+    if max(S, k.shape[1]) > cfg.attn_chunk_threshold:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=min(cfg.q_chunk, S),
+                                kv_chunk=min(cfg.kv_chunk, k.shape[1]),
+                                window_flag=window_flag)
+    else:
+        out = dense_attention(q, k, v, causal=causal, window=window,
+                              window_flag=window_flag)
+    out = out.reshape(B, S, H * Dh)
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out, "attn_out")
+    out = linear(out, p["wo"], p.get("bo"))
+    if return_kv:
+        return out, (k, v)
+    return out

@@ -1,0 +1,272 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) decoder LM.
+
+The sequence mixer is the chunked SSD recurrence. Two interchangeable
+implementations of identical math:
+  * ``ssd_chunked`` — pure jnp (XLA), used inside the model so the
+    512-device dry-run lowers through stock SPMD;
+  * ``repro.kernels.ssd_scan`` — the Pallas TPU kernel (VMEM-resident
+    state across chunks), selected on TPU.
+Decode keeps O(1) state: [H, P, N] SSM state + conv ring — this is why
+mamba2/zamba2 run the ``long_500k`` cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .layers import dense_init, rmsnorm, shard_act
+from .lm_common import (chunked_xent, embed_tokens, last_logits, norm,
+                        norm_params, pick_chunk, shift_labels)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    d_xbc = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, H, d_xbc
+
+
+def _layer_init(key, cfg, dtype):
+    s, d_in, H, d_xbc = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": norm_params(cfg, dtype),
+        "in_proj": dense_init(ks[0], (d, d_in + d_xbc + H), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_xbc), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ≈ 0.12
+        "ssm_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_l = jax.random.split(key)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jax.random.split(k_l, cfg.n_layers))
+    return {
+        "embed": dense_init(k_e, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "layers": layers,
+        "final_norm": norm_params(cfg, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (jnp) — identical math to kernels/ssd_scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, return_state: bool = False):
+    """x [B,L,H,P]; dt [B,L,H]; A [H]; Bm/Cm [B,L,G,N] → y [B,L,H,P]
+    (+ final state [B,H,P,N] when return_state).
+
+    B/C stay in *group* form [.., G, N] through the scan and expand to
+    heads only inside each step — passing head-expanded stacks through
+    the scan multiplied the sliced bytes (and their SPMD gathers) by
+    H/G (§Perf H3 iteration 1).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = L // chunk
+
+    def rs(a):
+        return jnp.moveaxis(a.reshape(Bsz, nc, chunk, *a.shape[2:]), 1, 0)
+
+    xs = (rs(x.astype(jnp.float32)), rs(dt.astype(jnp.float32)),
+          rs(Bm.astype(jnp.float32)), rs(Cm.astype(jnp.float32)))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(h, inp):
+        xc, dtc, bc, cc = inp                        # [B,Q,H,P],[B,Q,H],[B,Q,G,N]
+        bch = jnp.repeat(bc, rep, axis=2)            # local head expand
+        cch = jnp.repeat(cc, rep, axis=2)
+        da = dtc * A[None, None, :]                  # [B,Q,H]
+        s = jnp.cumsum(da, axis=1)
+        g = jnp.einsum("bqhn,bkhn->bhqk", cch, bch)
+        diff = s[:, :, None, :] - s[:, None, :, :]   # [B,Q,K,H]
+        diff = jnp.moveaxis(diff, -1, 1)             # [B,H,Q,K]
+        w = jnp.where(mask[None, None], jnp.exp(jnp.where(mask[None, None], diff, 0.0)), 0.0)
+        w = w * g * jnp.moveaxis(dtc, -1, 1)[:, :, None, :]
+        y = jnp.einsum("bhqk,bkhp->bqhp", w, xc)
+        # inter-chunk
+        sm = jnp.moveaxis(s, -1, 1)                  # [B,H,Q]
+        y = y + jnp.moveaxis(
+            jnp.exp(sm)[..., None] * jnp.einsum("bqhn,bhpn->bhqp", cch, h),
+            1, 2)
+        coef = dtc * jnp.exp(s[:, -1:, :] - s)       # [B,Q,H]
+        h_new = jnp.exp(sm[:, :, -1])[..., None, None] * h + jnp.einsum(
+            "bqhp,bqhn->bhpn", xc * coef[..., None], bch)
+        # the scan carry is saved per chunk for the backward — shard it
+        # over heads or its stack dominates peak memory (zamba2: 80 heads
+        # × [P,N] f32 per chunk)
+        h_new = shard_act(h_new, "bhpn")
+        return h_new, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_fin, y = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(Bsz, L, H, P).astype(x.dtype)
+    if return_state:
+        return y, h_fin
+    return y
+
+
+def _ssd(x, dt, A, Bm, Cm, cfg):
+    if cfg.use_pallas == "always" or (
+            cfg.use_pallas == "auto" and jax.default_backend() == "tpu"):
+        return kops.ssd_scan(x, dt, A, Bm, Cm, chunk=cfg.ssm.chunk)
+    return ssd_chunked(x, dt, A, Bm, Cm, pick_chunk(x.shape[1], cfg.ssm.chunk))
+
+
+# ---------------------------------------------------------------------------
+# Block forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+def mamba_block(x, lp, cfg, return_state: bool = False):
+    """x: [B, S, D] → [B, S, D] (residual NOT included).
+
+    return_state: also return (conv_tail [B, d_conv-1, d_xbc], h_final
+    [B, H, P, N]) for decode continuation after prefill.
+    """
+    s, d_in, H, d_xbc = _dims(cfg)
+    B, S, D = x.shape
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [d_in, d_in + d_xbc], axis=-1)
+    # causal depthwise conv over xbc, window d_conv
+    pads = jnp.zeros((B, s.d_conv - 1, d_xbc), xbc_raw.dtype)
+    xp = jnp.concatenate([pads, xbc_raw], axis=1)
+    xbc = sum(xp[:, i:i + S] * lp["conv_w"][i][None, None]
+              for i in range(s.d_conv)) + lp["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    xh = xs.reshape(B, S, H, s.head_dim)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    if return_state:
+        y, h_fin = ssd_chunked(xh, dtv, A, Bm, Cm,
+                               pick_chunk(S, cfg.ssm.chunk),
+                               return_state=True)
+    else:
+        y = _ssd(xh, dtv, A, Bm, Cm, cfg)
+    y = y + lp["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), lp["ssm_norm"])
+    out = y @ lp["out_proj"]
+    if return_state:
+        return out, (xbc_raw[:, S - (s.d_conv - 1):], h_fin)
+    return out
+
+
+def hidden_states(params, cfg, x):
+    def body(x, lp):
+        x = x + mamba_block(norm(x, lp["norm"], cfg), lp, cfg)
+        return shard_act(x, "btd"), None
+
+    from .transformer import _remat
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return norm(x, params["final_norm"], cfg)
+
+
+def loss_fn(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    x = hidden_states(params, cfg, x)
+    return chunked_xent(x, params["embed"], shift_labels(tokens))
+
+
+def prefill_step(params, cfg, batch, pad_to: int | None = None):  # noqa: ARG001 (stateless cache)
+    """Prefill: forward over the prompt, returning last logits + the O(1)
+    recurrent state (conv tails + SSM states) as the decode cache."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+
+    def body(x, lp):
+        y, (conv, h) = mamba_block(norm(x, lp["norm"], cfg), lp, cfg,
+                                   return_state=True)
+        return shard_act(x + y, "btd"), (conv, h)
+
+    from .transformer import _remat
+    body = _remat(body, cfg)
+    x, (conv, h) = jax.lax.scan(body, x, params["layers"])
+    x = norm(x, params["final_norm"], cfg)
+    logits = last_logits(x[:, -1], params["embed"])
+    S = tokens.shape[1]
+    return logits, {"conv": conv.astype(jnp.dtype(cfg.dtype)), "h": h,
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int):
+    """max_len only sets ``pos`` semantics — state is O(1) in seq len."""
+    s, d_in, H, d_xbc = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, s.d_conv - 1, d_xbc), dtype),
+        "h": jax.ShapeDtypeStruct((L, batch, H, s.head_dim, s.d_state),
+                                  jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def mamba_step(xt, lp, cfg, conv_state, h):
+    """Single-token recurrence. xt: [B, D] → ([B, D], conv_state, h)."""
+    s, d_in, H, d_xbc = _dims(cfg)
+    B = xt.shape[0]
+    zxbcdt = xt @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + d_xbc], axis=-1)
+    win = jnp.concatenate([conv_state, xbc[:, None]], axis=1)   # [B, dc, C]
+    xbc = jnp.einsum("bdc,dc->bc", win.astype(jnp.float32),
+                     lp["conv_w"].astype(jnp.float32)) + lp["conv_b"]
+    xbc = jax.nn.silu(xbc).astype(xt.dtype)
+    conv_state = win[:, 1:]
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    xh = xs.reshape(B, H, s.head_dim).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(B, s.n_groups, s.d_state),
+                    H // s.n_groups, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, s.n_groups, s.d_state),
+                    H // s.n_groups, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])   # [B, H]
+    A = -jnp.exp(lp["A_log"])
+    decay = jnp.exp(dtv * A[None])[..., None, None]                 # [B,H,1,1]
+    h = decay * h + (dtv[..., None] * xh)[..., None] * Bm[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm)
+    y = y + lp["D"][None, :, None] * xh
+    y = y.reshape(B, d_in).astype(xt.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), lp["ssm_norm"])
+    return y @ lp["out_proj"], conv_state, h
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)[:, 0]   # [B, D]
+
+    def body(x, xs):
+        lp, conv, h = xs
+        y, conv, h = mamba_step(norm(x, lp["norm"], cfg), lp, cfg, conv, h)
+        return x + y, (conv, h)
+
+    x, (conv_new, h_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["h"]))
+    x = norm(x, params["final_norm"], cfg)
+    return last_logits(x, params["embed"]), {
+        "conv": conv_new, "h": h_new, "pos": cache["pos"] + 1}

@@ -1,0 +1,123 @@
+"""Family dispatcher: one uniform API over all assigned architectures.
+
+API:
+  init_params(cfg, key)             → param pytree
+  loss_fn(params, cfg, batch)       → scalar loss       (train/prefill)
+  decode_step(params, cfg, cache, tokens) → (logits, cache)
+  cache_spec(cfg, batch, max_len)   → ShapeDtypeStruct pytree
+  input_specs(cfg, shape)           → dry-run input ShapeDtypeStructs
+  count_params(tree) / active_params(cfg, tree)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+from . import encdec, hybrid, mamba2, moe_transformer, transformer
+
+_FAMS = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe_transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "audio": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMS[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key):
+    return family_module(cfg).init_params(cfg, key)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    return family_module(cfg).loss_fn(params, cfg, batch)
+
+
+def _use_longctx(cfg: ModelConfig, max_len: int) -> bool:
+    return (cfg.family == "dense" and cfg.sliding_window is not None
+            and cfg.global_every is not None and max_len > 65536)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    mod = family_module(cfg)
+    if "local_k" in cache:
+        return transformer.decode_step_longctx(params, cfg, cache, tokens)
+    return mod.decode_step(params, cfg, cache, tokens)
+
+
+def prefill_step(params, cfg: ModelConfig, batch, pad_to: int | None = None):
+    """Inference prefill → (last logits, primed decode cache)."""
+    return family_module(cfg).prefill_step(params, cfg, batch, pad_to=pad_to)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    if _use_longctx(cfg, max_len):
+        return transformer.longctx_cache_spec(cfg, batch, max_len)
+    return family_module(cfg).cache_spec(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda sp: jnp.zeros(sp.shape, sp.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill → {"batch": {...}}; decode → {"cache": ..., "tokens": ...}.
+    No device allocation — safe under the 512-device dry-run.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.dtype(cfg.dtype)),
+                "tokens": jax.ShapeDtypeStruct((B, S), tok),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "patches": jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.vision_dim), jnp.dtype(cfg.dtype)),
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches), tok),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        return {"batch": batch}
+    # decode: one new token against a seq_len history
+    return {
+        "cache": cache_spec(cfg, B, S),
+        "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+    }
+
+
+def count_params(tree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(tree)))
+
+
+def count_params_specs(tree) -> int:
+    return count_params(tree)
+
+
+def active_params(cfg: ModelConfig, total: int) -> int:
+    """Active params per token (MoE: top_k + shared of n_experts)."""
+    if cfg.family != "moe":
+        return total
+    moe = cfg.moe
+    expert_p = cfg.n_layers * moe.n_experts * 3 * cfg.d_model * moe.d_ff_expert
+    active_e = cfg.n_layers * (moe.top_k + moe.n_shared_experts) \
+        * 3 * cfg.d_model * moe.d_ff_expert
+    return total - expert_p + active_e
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of params without allocating (eval_shape)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))

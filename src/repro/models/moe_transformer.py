@@ -1,0 +1,122 @@
+"""MoE decoder transformer (qwen3-moe, phi3.5-moe) with CG routing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.moe.layer import init_moe_params, moe_ffn
+
+from .layers import (apply_rope, attention, attn_params, decode_attention,
+                     dense_init, linear, shard_act)
+from .lm_common import (chunked_xent, embed_tokens, last_logits, norm,
+                        norm_params, pad_cache_seq, shift_labels,
+                        update_kv_cache)
+from .transformer import _remat, cache_spec, init_cache  # noqa: F401 (reuse)
+
+AUX_COEF = 0.01
+Z_COEF = 1e-3
+
+
+def _layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": norm_params(cfg, dtype),
+        "attn": attn_params(ks[0], cfg, dtype),
+        "mlp_norm": norm_params(cfg, dtype),
+        "moe": init_moe_params(ks[1], cfg, dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_l = jax.random.split(key)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jax.random.split(k_l, cfg.n_layers))
+    return {
+        "embed": dense_init(k_e, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "layers": layers,
+        "final_norm": norm_params(cfg, dtype),
+    }
+
+
+def hidden_states(params, cfg, x, positions, collect_kv: bool = False):
+    def body(carry, lp):
+        x, aux, z = carry
+        h, kv = attention(norm(x, lp["attn_norm"], cfg), lp["attn"], cfg,
+                          positions=positions, causal=True,
+                          window=cfg.sliding_window, return_kv=True)
+        x = x + h
+        h, m = moe_ffn(norm(x, lp["mlp_norm"], cfg), lp["moe"], cfg)
+        x = x + h
+        return ((shard_act(x, "btd"), aux + m["aux_loss"], z + m["z_loss"]),
+                (kv if collect_kv else None))
+
+    body = _remat(body, cfg)
+    (x, aux, z), kvs = jax.lax.scan(
+        body, (x, jnp.float32(0), jnp.float32(0)), params["layers"])
+    x = norm(x, params["final_norm"], cfg)
+    if collect_kv:
+        return x, aux, z, kvs
+    return x, aux, z
+
+
+def loss_fn(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    x, aux, z = hidden_states(params, cfg, x, positions)
+    labels = shift_labels(tokens)
+    ce = chunked_xent(x, params["embed"], labels)
+    return ce + AUX_COEF * aux / cfg.n_layers + Z_COEF * z / cfg.n_layers
+
+
+def prefill_step(params, cfg, batch, pad_to: int | None = None):
+    """Inference prefill → (last logits, primed KV cache)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    x, _, _, (k, v) = hidden_states(params, cfg, x, positions,
+                                    collect_kv=True)
+    logits = last_logits(x[:, -1], params["embed"])
+    return logits, {"k": pad_cache_seq(k, pad_to),
+                    "v": pad_cache_seq(v, pad_to),
+                    "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg, cache, tokens):
+    """One decode step. tokens: [B, 1] → (logits [B, V], new cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        xa = norm(x, lp["attn_norm"], cfg)
+        q = linear(xa, lp["attn"]["wq"], lp["attn"].get("bq")).reshape(B, 1, H, Dh)
+        k = linear(xa, lp["attn"]["wk"], lp["attn"].get("bk")).reshape(B, 1, KV, Dh)
+        v = linear(xa, lp["attn"]["wv"], lp["attn"].get("bv")).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        from .sp_decode import seqpar_update_and_attend
+        out, kc, vc = seqpar_update_and_attend(q, kc, vc, k, v, pos)
+        out = linear(out.reshape(B, 1, H * Dh), lp["attn"]["wo"],
+                     lp["attn"].get("bo"))
+        x = x + out
+        # decode: whole batch is a single token group (no cross-token
+        # contention — capacity max(1, cf·k/E) ≥ 1 per token slot)
+        h, _ = moe_ffn(norm(x, lp["mlp_norm"], cfg).reshape(1, B, -1),
+                       lp["moe"], cfg)
+        x = x + h.reshape(B, 1, -1)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = norm(x, params["final_norm"], cfg)
+    logits = last_logits(x[:, 0], params["embed"])
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,288 @@
+"""Dense decoder-only transformer (gemma3 / internlm2 / starcoder2 /
+command-r-plus) + VLM variant (internvl2: stub patch frontend).
+
+Layer stack is a ``lax.scan`` over stacked per-layer params (one compiled
+layer body — compile-time hygiene for the 512-device dry-run), with a
+configurable remat policy. gemma3's 5:1 local:global interleave is a
+per-layer traced window flag.
+
+For ``long_500k`` decode, gemma3 uses the **ring-buffer** path
+(``init_longctx_cache``/``decode_step_longctx``): local layers hold a
+window-sized rotating KV cache (sub-quadratic memory), only the 1-in-6
+global layers keep the full history.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention, attn_params, decode_attention,
+                     dense_init, gelu_mlp, linear, mlp_params, shard_act,
+                     swiglu_mlp)
+from .lm_common import (chunked_xent, embed_tokens, last_logits, norm,
+                        norm_params, pad_cache_seq, shift_labels,
+                        update_kv_cache)
+
+
+def _mlp_params(key, cfg, dtype):
+    if cfg.mlp_kind == "gelu":
+        ks = jax.random.split(key, 2)
+        p = {"w1": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+             "w2": dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype)}
+        if cfg.use_bias:
+            p["b1"] = jnp.zeros((cfg.d_ff,), dtype)
+            p["b2"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+    return mlp_params(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _mlp(x, p, cfg):
+    return gelu_mlp(x, p) if cfg.mlp_kind == "gelu" else swiglu_mlp(x, p)
+
+
+def _layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": norm_params(cfg, dtype),
+        "attn": attn_params(ks[0], cfg, dtype),
+        "mlp_norm": norm_params(cfg, dtype),
+        "mlp": _mlp_params(ks[1], cfg, dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_l, k_v = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(
+        jax.random.split(k_l, cfg.n_layers))
+    params = {
+        "embed": dense_init(k_e, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "layers": layers,
+        "final_norm": norm_params(cfg, dtype),
+    }
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(
+            k_v, (cfg.vision_dim, cfg.d_model), dtype)
+    return params
+
+
+def _window_flags(cfg):
+    """[L] bool — True where the sliding window applies (local layers)."""
+    if cfg.sliding_window is None:
+        return None
+    L = cfg.n_layers
+    if cfg.global_every is None:
+        return jnp.ones((L,), bool)
+    return (jnp.arange(L) % cfg.global_every) != (cfg.global_every - 1)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "attn_out":
+        # save only the (cheap-to-store, expensive-to-recompute)
+        # attention outputs; recompute everything else in backward
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def hidden_states(params, cfg, x, positions, collect_kv: bool = False):
+    """Run the layer stack. x: [B, S, D] → [B, S, D] (final-normed).
+
+    collect_kv=True also returns the stacked per-layer (k, v)
+    [L, B, S, KV, Dh] for KV-cache priming (prefill).
+    """
+    flags = _window_flags(cfg)
+
+    def body(x, xs):
+        lp, flag = xs
+        h, kv = attention(norm(x, lp["attn_norm"], cfg), lp["attn"], cfg,
+                          positions=positions, causal=True,
+                          window=cfg.sliding_window, window_flag=flag,
+                          return_kv=True)
+        x = x + h
+        h = _mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+        x = x + h
+        return shard_act(x, "btd"), (kv if collect_kv else None)
+
+    body = _remat(body, cfg)
+    if flags is None:
+        flags = jnp.ones((cfg.n_layers,), bool)   # inert
+    x, kvs = jax.lax.scan(body, x, (params["layers"], flags))
+    x = norm(x, params["final_norm"], cfg)
+    if collect_kv:
+        return x, kvs
+    return x
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE. batch: {"tokens": [B, S]} (+"patches" for vlm)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    n_prefix = 0
+    if cfg.family == "vlm":
+        vis = batch["patches"].astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+        n_prefix = vis.shape[1]
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    x = hidden_states(params, cfg, x, positions)
+    labels = shift_labels(tokens)
+    return chunked_xent(x[:, n_prefix:], params["embed"], labels)
+
+
+def prefill_step(params, cfg, batch, pad_to: int | None = None):
+    """Inference prefill: forward over the prompt, return last-position
+    logits + the primed KV cache (pos = S; seq padded to ``pad_to`` to
+    leave decode headroom)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    if cfg.family == "vlm":
+        vis = batch["patches"].astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+    x = shard_act(x, "btd")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+    x, (k, v) = hidden_states(params, cfg, x, positions, collect_kv=True)
+    logits = last_logits(x[:, -1], params["embed"])
+    cache = {"k": pad_cache_seq(k, pad_to), "v": pad_cache_seq(v, pad_to),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (uniform cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_spec(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def decode_step(params, cfg, cache, tokens):
+    """One decode step. tokens: [B, 1] → (logits [B, V], new cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    flags = _window_flags(cfg)
+    if flags is None:
+        flags = jnp.ones((cfg.n_layers,), bool)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    S = cache["k"].shape[2]
+
+    def body(x, xs):
+        lp, kc, vc, flag = xs
+        xa = norm(x, lp["attn_norm"], cfg)
+        q = linear(xa, lp["attn"]["wq"], lp["attn"].get("bq")).reshape(B, 1, H, Dh)
+        k = linear(xa, lp["attn"]["wk"], lp["attn"].get("bk")).reshape(B, 1, KV, Dh)
+        v = linear(xa, lp["attn"]["wv"], lp["attn"].get("bv")).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        from .sp_decode import seqpar_update_and_attend
+        lo = jnp.zeros((), jnp.int32)
+        if cfg.sliding_window is not None:
+            lo = pos + 1 - cfg.sliding_window
+            lo = jnp.where(flag, jnp.maximum(lo, 0), 0)
+        out, kc, vc = seqpar_update_and_attend(q, kc, vc, k, v, pos, lo=lo)
+        out = linear(out.reshape(B, 1, H * Dh), lp["attn"]["wo"],
+                     lp["attn"].get("bo"))
+        x = x + out
+        x = x + _mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], flags))
+    x = norm(x, params["final_norm"], cfg)
+    logits = last_logits(x[:, 0], params["embed"])
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# gemma3 long-context decode: ring-buffer local KV, full global KV
+# ---------------------------------------------------------------------------
+
+def init_longctx_cache(cfg, batch: int, max_len: int):
+    spec = longctx_cache_spec(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def longctx_cache_spec(cfg, batch: int, max_len: int):
+    assert cfg.sliding_window and cfg.global_every
+    dtype = jnp.dtype(cfg.dtype)
+    L, ge, W = cfg.n_layers, cfg.global_every, cfg.sliding_window
+    n_global = L // ge
+    n_local = L - n_global
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "local_k": jax.ShapeDtypeStruct((n_local, batch, W, KV, Dh), dtype),
+        "local_v": jax.ShapeDtypeStruct((n_local, batch, W, KV, Dh), dtype),
+        "global_k": jax.ShapeDtypeStruct((n_global, batch, max_len, KV, Dh), dtype),
+        "global_v": jax.ShapeDtypeStruct((n_global, batch, max_len, KV, Dh), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_step_longctx(params, cfg, cache, tokens):
+    """One decode step with ring-buffer local caches (gemma3 @ 500k).
+
+    Layers unrolled in Python (heterogeneous cache shapes preclude scan);
+    L is small (26) so the HLO stays modest.
+    """
+    B = tokens.shape[0]
+    ge, W = cfg.global_every, cfg.sliding_window
+    x = embed_tokens(params["embed"], tokens, cfg.d_model)
+    pos = cache["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    new_cache = dict(cache)
+    lk, lv = cache["local_k"], cache["local_v"]
+    gk, gv = cache["global_k"], cache["global_v"]
+    i_loc = i_glob = 0
+    for layer in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a, i=layer: a[i], params["layers"])
+        is_global = (layer % ge) == (ge - 1)
+        xa = norm(x, lp["attn_norm"], cfg)
+        q = linear(xa, lp["attn"]["wq"], lp["attn"].get("bq")).reshape(B, 1, H, Dh)
+        k = linear(xa, lp["attn"]["wk"], lp["attn"].get("bk")).reshape(B, 1, KV, Dh)
+        v = linear(xa, lp["attn"]["wv"], lp["attn"].get("bv")).reshape(B, 1, KV, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if is_global:
+            from .sp_decode import seqpar_update_and_attend
+            out, kc, vc = seqpar_update_and_attend(
+                q, gk[i_glob], gv[i_glob], k, v, pos)
+            gk = gk.at[i_glob].set(kc)
+            gv = gv.at[i_glob].set(vc)
+            i_glob += 1
+        else:
+            slot = pos % W
+            kc, vc = update_kv_cache(lk[i_loc], lv[i_loc], k, v, slot)
+            lk = lk.at[i_loc].set(kc)
+            lv = lv.at[i_loc].set(vc)
+            out = decode_attention(q, kc, vc, jnp.minimum(pos + 1, W))
+            i_loc += 1
+        out = linear(out.reshape(B, 1, H * Dh), lp["attn"]["wo"],
+                     lp["attn"].get("bo"))
+        x = x + out
+        x = x + _mlp(norm(x, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+    x = norm(x, params["final_norm"], cfg)
+    new_cache.update(local_k=lk, local_v=lv, global_k=gk, global_v=gv,
+                     pos=pos + 1)
+    return last_logits(x[:, 0], params["embed"]), new_cache

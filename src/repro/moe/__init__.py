@@ -1,0 +1,3 @@
+"""MoE with Consistent-Grouping routing (the paper's technique, site a)."""
+from .layer import init_moe_params, moe_ffn  # noqa: F401
+from .router import RoutingResult, route  # noqa: F401

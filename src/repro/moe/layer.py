@@ -1,0 +1,110 @@
+"""Expert-parallel MoE FFN layer with CG routing.
+
+Token groups: the batch dimension is the group axis (one group per
+sequence — the "source" in the paper's terms); every group routes its
+S·k slots against per-expert capacity (1+ε)·S·k/E. Dispatch/combine are
+scatter/gather into [B, E, C, D] buffers — B sharded on the data axis,
+E on the model axis, so GSPMD lowers the group→expert exchange into the
+EP all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# NOTE: imported from the submodule lazily in the functions below to
+# avoid the repro.models ↔ repro.moe import cycle (models.moe_transformer
+# imports this module).
+from .router import RoutingResult, route
+
+
+def _layers():
+    from repro.models import layers
+    return layers
+
+
+def init_moe_params(key, cfg, dtype):
+    dense_init = _layers().dense_init
+    moe = cfg.moe
+    d, f, E = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w1": dense_init(ks[1], (E, d, f), dtype),
+        "w3": dense_init(ks[2], (E, d, f), dtype),
+        "w2": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if moe.n_shared_experts:
+        fs = moe.n_shared_experts * f
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": dense_init(kss[0], (d, fs), dtype),
+            "w3": dense_init(kss[1], (d, fs), dtype),
+            "w2": dense_init(kss[2], (fs, d), dtype),
+        }
+    return p
+
+
+def moe_ffn(x: jnp.ndarray, p, cfg):
+    """x: [B, S, D] → ([B, S, D], aux_metrics dict).
+
+    Dispatch is GSPMD-friendly: the only scatter is over int32 *indices*
+    (the slot→token inverse permutation, ~MBs); token rows then move via
+    gathers whose outputs carry the expert-parallel sharding, so the
+    partitioner lowers them into the EP exchange instead of replicating
+    activations.
+    """
+    shard_act = _layers().shard_act
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    T = S
+    capacity = max(1, int(moe.capacity_factor * T * k / E))
+
+    r: RoutingResult = jax.vmap(
+        lambda xg: route(xg, p["router"], moe))(x)           # leaves [B, ...]
+
+    # ---- inverse permutation: which token fills expert slot [e, c] ----
+    flat_idx = jnp.where(r.assign >= 0,
+                         r.assign * capacity + r.slot, E * capacity)  # [B,T,k]
+    tok_idx = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :, None],
+                               flat_idx.shape)
+    slot_token = jnp.full((B, E * capacity + 1), T, jnp.int32)
+    slot_token = slot_token.at[
+        jnp.arange(B)[:, None, None], flat_idx].set(tok_idx)
+    slot_token = slot_token[:, : E * capacity]               # [B, E*C]
+
+    # ---- dispatch: gather token rows into expert buffers ----
+    xp = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(xp, slot_token[..., None], axis=1)
+    buf = buf.reshape(B, E, capacity, D)
+    buf = shard_act(buf, "becd")
+
+    # ---- expert compute (E sharded on model axis) ----
+    h = jnp.einsum("becd,edf->becf", buf, p["w1"])
+    g = jnp.einsum("becd,edf->becf", buf, p["w3"])
+    h = jax.nn.silu(h) * g
+    out = jnp.einsum("becf,efd->becd", h, p["w2"])
+    out = shard_act(out, "becd")
+
+    # ---- combine: gather expert outputs back to token slots ----
+    out_flat = out.reshape(B, E * capacity, D)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((B, 1, D), out.dtype)], axis=1)  # sentinel row
+    gathered = jnp.take_along_axis(
+        out_flat, flat_idx.reshape(B, T * k)[..., None], axis=1)
+    gathered = gathered.reshape(B, T, k, D)
+    y = jnp.sum(gathered * r.weights[..., None].astype(out.dtype), axis=2)
+
+    if moe.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w1"]) * (x @ sp["w3"])
+        y = y + hs @ sp["w2"]
+
+    metrics = {
+        "aux_loss": jnp.mean(r.aux_loss),
+        "z_loss": jnp.mean(r.z_loss),
+        "drop_frac": jnp.mean((r.assign < 0).astype(jnp.float32)),
+        "max_load_frac": jnp.max(r.load) / capacity,
+    }
+    return y, metrics

@@ -1,0 +1,61 @@
+"""MoE routers: baseline top-k (drop) vs Consistent-Grouping (overflow).
+
+The CG router is the paper's technique as a first-class MoE feature
+(DESIGN.md §2): expert capacity is the (1+ε)·avg bound ((1+ε) =
+``capacity_factor``), and a token-slot that would be *dropped* at a full
+expert instead probes the token's next-preferred experts —
+PoRC's salted-hash sequence with the gate ordering as the probe order.
+
+Semantics match ``repro.kernels.ref.ref_cg_dispatch`` /
+``repro.kernels.cg_dispatch`` (the Pallas kernel used on TPU); here the
+pure-jnp path is used inside the model so the 512-device dry-run lowers
+through stock XLA.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import ref_cg_dispatch
+
+
+class RoutingResult(NamedTuple):
+    assign: jnp.ndarray      # [T, k] expert per slot (-1 = dropped)
+    slot: jnp.ndarray        # [T, k] position in expert buffer
+    weights: jnp.ndarray     # [T, k] renormalized combine weights
+    load: jnp.ndarray        # [E] expert occupancy
+    aux_loss: jnp.ndarray    # [] Switch-style load-balance loss
+    z_loss: jnp.ndarray      # [] router logit z-loss
+
+
+def _aux_losses(logits: jnp.ndarray, assign: jnp.ndarray, n_experts: int):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    # fraction of slots landing on each expert
+    onehot = jax.nn.one_hot(jnp.where(assign < 0, n_experts, assign),
+                            n_experts + 1, dtype=jnp.float32)[..., :n_experts]
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)            # [E]
+    p = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(f * p)
+    z = jnp.mean(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2)
+    return aux, z
+
+
+def route(x: jnp.ndarray, router_w: jnp.ndarray, moe, *,
+          block: int | None = None) -> RoutingResult:
+    """Route one token group. x: [T, D]; router_w: [D, E]."""
+    T = x.shape[0]
+    E, k = moe.n_experts, moe.top_k
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    depth = k if moe.router == "topk" else min(E, k + moe.overflow_depth)
+    gates, pref = jax.lax.top_k(probs, depth)
+    capacity = max(1, int(moe.capacity_factor * T * k / E))
+    if block is None:
+        block = min(128, T)
+    assign, slot, weights, load = ref_cg_dispatch(
+        pref.astype(jnp.int32), gates, n_experts=E, k=k,
+        capacity=capacity, block=block)
+    aux, z = _aux_losses(logits, assign, E)
+    return RoutingResult(assign, slot, weights, load, aux, z)

@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, global_norm, init, init_specs, schedule, update  # noqa: F401

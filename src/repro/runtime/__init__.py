@@ -1,0 +1,2 @@
+from .fault_tolerance import FaultTolerantRunner, FTConfig, plan_remesh  # noqa: F401
+from .straggler import DelegationBalancer, StragglerConfig  # noqa: F401

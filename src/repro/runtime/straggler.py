@@ -1,0 +1,79 @@
+"""Straggler mitigation = the paper's *worker delegation* at step scale.
+
+Each data-parallel host monitors its own step time (the "worker
+monitors its workload" of §V-C) and emits a **binary** signal — busy
+(step time above θ_b × median) or idle (below θ_i × median). Signals
+piggyback on the per-step metrics the trainer already collects (no
+extra communication round — the paper's piggybacking). The balancer
+pairs busy hosts with idle hosts FCFS and moves one pipeline shard
+(virtual worker) per pair; routing changes affect only future batches.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StragglerConfig:
+    theta_busy: float = 1.15     # step_time > θ_b × median → busy
+    theta_idle: float = 0.90     # step_time < θ_i × median → idle
+    window: int = 8              # time slot t0, in steps
+    max_moves_per_slot: int = 2
+
+
+@dataclass
+class DelegationBalancer:
+    """Source-side CG balancer for pipeline shards across hosts."""
+    n_hosts: int
+    cfg: StragglerConfig = field(default_factory=StragglerConfig)
+
+    def __post_init__(self):
+        self._hist: list[deque] = [deque(maxlen=self.cfg.window)
+                                   for _ in range(self.n_hosts)]
+        self._busy_queue: deque = deque()   # FCFS (paper §V-B pairing)
+        self._idle_queue: deque = deque()
+        self.moves: list[tuple[int, int]] = []
+
+    def observe(self, host: int, step_time_s: float) -> None:
+        self._hist[host].append(step_time_s)
+
+    def signals(self) -> tuple[list[int], list[int]]:
+        """Binary delegation signals after the current slot."""
+        means = [np.mean(h) if h else np.nan for h in self._hist]
+        med = np.nanmedian(means)
+        busy, idle = [], []
+        if not np.isfinite(med) or med <= 0:
+            return busy, idle
+        for h, m in enumerate(means):
+            if not np.isfinite(m):
+                continue
+            if m > self.cfg.theta_busy * med:
+                busy.append(h)
+            elif m < self.cfg.theta_idle * med:
+                idle.append(h)
+        return busy, idle
+
+    def rebalance(self, pipeline) -> list[tuple[int, int]]:
+        """Pair busy→idle hosts FCFS and move one shard per pair
+        (bounded per slot). ``pipeline`` must expose move_shard()."""
+        busy, idle = self.signals()
+        for h in busy:
+            if h not in self._busy_queue:
+                self._busy_queue.append(h)
+        for h in idle:
+            if h not in self._idle_queue:
+                self._idle_queue.append(h)
+        moved = []
+        for _ in range(self.cfg.max_moves_per_slot):
+            if not self._busy_queue or not self._idle_queue:
+                break
+            src = self._busy_queue.popleft()
+            dst = self._idle_queue.popleft()
+            sid = pipeline.move_shard(src, dst)
+            if sid is not None:
+                moved.append((src, dst))
+        self.moves.extend(moved)
+        return moved

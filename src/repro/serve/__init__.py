@@ -1,0 +1,1 @@
+from .engine import CGRequestRouter, ServingEngine  # noqa: F401

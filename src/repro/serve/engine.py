@@ -1,0 +1,139 @@
+"""Batched serving engine with CG request routing (paper site c).
+
+Replicas are the *workers* (possibly heterogeneous — different chip
+generations or cpulimit'ed fractions, exactly Fig. 15's setup); request
+streams are keyed (session/tenant id — skewed in practice) and routed
+by PoRC onto *virtual replicas*, which CG pairing re-assigns as
+replicas signal busy/idle from their queue occupancy — the paper's
+queue-length utilization signal (§VII "Monitoring Performance").
+
+The engine is single-process here (replicas are model states on the
+same mesh or plain callables in tests); the routing layer is the part
+that scales out.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.hashing import hash_to_bins
+import jax.numpy as jnp
+
+
+@dataclass
+class ReplicaState:
+    queue: deque = field(default_factory=deque)
+    served: int = 0
+    busy_signal: bool = False
+    idle_signal: bool = False
+
+
+@dataclass
+class CGRequestRouter:
+    """PoRC + virtual-replica assignment for incoming request keys."""
+    n_replicas: int
+    alpha: int = 8
+    eps: float = 0.05
+    queue_hi: float = 0.85        # of max_queue → busy
+    queue_lo: float = 0.5
+    max_queue: int = 256
+
+    def __post_init__(self):
+        self.n_virtual = self.n_replicas * self.alpha
+        self.vw_owner = np.repeat(np.arange(self.n_replicas), self.alpha)
+        self.vw_load = np.zeros(self.n_virtual)
+        self.routed = 0
+        self.moves = 0
+
+    def route(self, key: int) -> int:
+        """PoRC over virtual replicas (Alg. 1), then owner lookup."""
+        self.routed += 1
+        cap = (1.0 + self.eps) * self.routed / self.n_virtual
+        salt = 1
+        vw = int(hash_to_bins(jnp.int32(key), salt, self.n_virtual))
+        while self.vw_load[vw] >= cap and salt < 4 * self.n_virtual:
+            salt += 1
+            vw = int(hash_to_bins(jnp.int32(key), salt, self.n_virtual))
+        if self.vw_load[vw] >= cap:
+            vw = int(np.argmin(self.vw_load))
+        self.vw_load[vw] += 1
+        return int(self.vw_owner[vw])
+
+    def route_batch(self, keys: np.ndarray) -> np.ndarray:
+        from repro.kernels.ref import ref_porc_assign
+        n = len(keys)
+        block = 128
+        pad = (-n) % block
+        padded = np.concatenate([keys, np.zeros(pad, np.int32)]).astype(np.int32)
+        assign_vw, load = ref_porc_assign(
+            jnp.asarray(padded), self.n_virtual, eps=self.eps,
+            load0=jnp.asarray(self.vw_load, jnp.float32), m0=float(self.routed))
+        self.vw_load = np.array(load)   # writable copy
+        self.routed += n
+        return self.vw_owner[np.asarray(assign_vw)[:n]]
+
+    def rebalance(self, busy: list[int], idle: list[int]) -> int:
+        """Paired moves: one virtual replica per (busy, idle) pair."""
+        moved = 0
+        for b, i in zip(busy, idle):
+            owned = np.flatnonzero(self.vw_owner == b)
+            if len(owned) == 0:
+                continue
+            # move the most-loaded virtual replica (greatest relief)
+            vw = owned[np.argmax(self.vw_load[owned])]
+            self.vw_owner[vw] = i
+            moved += 1
+        self.moves += moved
+        return moved
+
+
+class ServingEngine:
+    """Queue-per-replica engine. ``replica_fns`` map a batch of request
+    payloads to outputs; service speed differences model heterogeneity."""
+
+    def __init__(self, replica_fns, router: CGRequestRouter | None = None,
+                 max_batch: int = 8):
+        self.replicas = [ReplicaState() for _ in replica_fns]
+        self.fns = list(replica_fns)
+        self.router = router or CGRequestRouter(len(replica_fns))
+        self.max_batch = max_batch
+        self.latencies: list[float] = []
+
+    def submit(self, key: int, payload) -> None:
+        r = self.router.route(key)
+        self.replicas[r].queue.append((time.monotonic(), payload))
+
+    def submit_batch(self, keys: np.ndarray, payloads) -> None:
+        assign = self.router.route_batch(np.asarray(keys, np.int32))
+        now = time.monotonic()
+        for r, p in zip(assign, payloads):
+            self.replicas[int(r)].queue.append((now, p))
+
+    def step(self) -> int:
+        """One engine tick: each replica serves up to max_batch requests,
+        then delegation signals fire and the router re-pairs."""
+        served = 0
+        for i, (rep, fn) in enumerate(zip(self.replicas, self.fns)):
+            batch = []
+            while rep.queue and len(batch) < self.max_batch:
+                batch.append(rep.queue.popleft())
+            if batch:
+                fn([p for _, p in batch])
+                now = time.monotonic()
+                self.latencies.extend(now - t for t, _ in batch)
+                rep.served += len(batch)
+                served += len(batch)
+            occ = len(rep.queue) / self.router.max_queue
+            rep.busy_signal = occ > self.router.queue_hi
+            rep.idle_signal = occ < self.router.queue_lo
+        busy = [i for i, r in enumerate(self.replicas) if r.busy_signal]
+        idle = [i for i, r in enumerate(self.replicas) if r.idle_signal]
+        if busy and idle:
+            self.router.rebalance(busy, idle)
+        return served
+
+    def queue_depths(self) -> list[int]:
+        return [len(r.queue) for r in self.replicas]

@@ -1,0 +1,11 @@
+"""Test hygiene: reset the global activation-sharding rules between
+tests so mesh-installing tests (dryrun) don't leak into model tests."""
+import pytest
+
+from repro.models.layers import set_act_sharding
+
+
+@pytest.fixture(autouse=True)
+def _reset_act_rules():
+    yield
+    set_act_sharding({})

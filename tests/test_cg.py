@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cg, streams
+
+M = 200_000
+N_KEYS = 5000
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return streams.sample_zipf_stream(jax.random.PRNGKey(0), M, N_KEYS, 1.1)
+
+
+def _caps(n, y, z, rho=0.8):
+    # service rates: sum = arrival_rate / rho = 1.25 msgs/unit
+    c = streams.heterogeneous_capacities(n, y, z)
+    return jnp.asarray(c / rho, jnp.float32)
+
+
+def test_cg_converges_on_heterogeneous(keys):
+    cfg = cg.CGConfig(n_workers=10, alpha=10, eps=0.01, slot_len=10_000)
+    res = cg.run(cfg, keys, _caps(10, 3, 5.0))
+    early = float(np.mean(np.asarray(res.imbalance)[:3]))
+    late = float(np.mean(np.asarray(res.imbalance)[-3:]))
+    assert late < early, f"no convergence: early {early} late {late}"
+    assert int(res.moves) > 0
+
+
+def test_vw_population_conserved(keys):
+    """Pairing keeps the virtual-worker count per system constant."""
+    cfg = cg.CGConfig(n_workers=8, alpha=10, eps=0.01, slot_len=10_000)
+    res = cg.run(cfg, keys, _caps(8, 2, 4.0))
+    owners = np.asarray(res.state.vw_owner)
+    assert owners.shape == (80,)
+    assert owners.min() >= 0 and owners.max() < 8
+
+
+def test_assignment_valid_and_complete(keys):
+    cfg = cg.CGConfig(n_workers=10, alpha=10, slot_len=10_000)
+    res = cg.run(cfg, keys, _caps(10, 1, 1.0))
+    a = np.asarray(res.assignment)
+    assert a.shape == (M,)
+    assert a.min() >= 0 and a.max() < 10
+    vw = np.asarray(res.vw_assignment)
+    assert vw.min() >= 0 and vw.max() < 100
+
+
+def test_cg_beats_kg_on_heterogeneous(keys):
+    from repro.core import partitioners as P, simulation
+    n = 10
+    caps = _caps(n, 3, 5.0)
+    cfg = cg.CGConfig(n_workers=n, alpha=10, eps=0.01, slot_len=10_000)
+    res = cg.run(cfg, keys, caps)
+    kg = simulation.simulate_queues(
+        P.key_grouping(keys, n), caps, n, 10_000)
+    # steady-state latency spread: CG flat, KG diverging (Fig 10)
+    assert float(res.latency_spread[-1]) < float(kg.latency_spread[-1])
+    assert float(res.imbalance[-1]) < float(kg.imbalance[-1])
+
+
+def test_cg_adapts_to_capacity_change(keys):
+    """Fig 13: resources change mid-stream; CG re-converges."""
+    n = 10
+    slot = 4000
+    slots = M // slot
+    sched = streams.dynamic_capacity_schedule(n, M)
+    caps = np.zeros((slots, n))
+    for start, c in sched:
+        caps[start // slot:] = c / 0.8
+    cfg = cg.CGConfig(n_workers=n, alpha=10, eps=0.01, slot_len=slot,
+                      max_moves_per_slot=8)
+    res = cg.run(cfg, keys, jnp.asarray(caps, jnp.float32))
+    imb = np.asarray(res.imbalance)
+    third = slots // 3
+    # the spike right after the last change decays by the end
+    spike = np.mean(imb[2 * third + 1: 2 * third + 4])
+    settled = np.mean(imb[-3:])
+    assert settled < spike, (spike, settled)
+    assert int(res.moves) >= 10
+
+
+def test_inner_scheme_variants(keys):
+    for inner in ("PORC", "KG", "SG"):
+        cfg = cg.CGConfig(n_workers=6, alpha=5, slot_len=10_000, inner=inner)
+        res = cg.run(cfg, keys[:100_000], _caps(6, 1, 1.0))
+        assert np.asarray(res.assignment).max() < 6

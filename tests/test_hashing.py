@@ -1,0 +1,51 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import (candidate_bins, hash_to_bins, hash_u32,
+                                hash_unit_interval)
+
+
+def test_deterministic():
+    k = jnp.arange(1000, dtype=jnp.int32)
+    a = np.asarray(hash_u32(k, 1))
+    b = np.asarray(hash_u32(k, 1))
+    assert np.array_equal(a, b)
+
+
+def test_salt_independence():
+    k = jnp.arange(1000, dtype=jnp.int32)
+    a = np.asarray(hash_to_bins(k, 1, 64))
+    b = np.asarray(hash_to_bins(k, 2, 64))
+    assert not np.array_equal(a, b)
+    # different salts should agree only ~1/64 of the time
+    assert (a == b).mean() < 0.10
+
+
+def test_range():
+    k = jnp.arange(10_000, dtype=jnp.int32)
+    for n in (2, 7, 64, 1000):
+        h = np.asarray(hash_to_bins(k, 3, n))
+        assert h.min() >= 0 and h.max() < n
+
+
+def test_uniformity():
+    k = jnp.arange(100_000, dtype=jnp.int32)
+    h = np.asarray(hash_to_bins(k, 5, 100))
+    counts = np.bincount(h, minlength=100)
+    # each bin expects 1000; allow ±15%
+    assert counts.min() > 850 and counts.max() < 1150
+
+
+def test_unit_interval():
+    k = jnp.arange(10_000, dtype=jnp.int32)
+    u = np.asarray(hash_unit_interval(k, 1))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.02
+
+
+def test_candidate_bins_matches_salts():
+    k = jnp.arange(100, dtype=jnp.int32)
+    cand = np.asarray(candidate_bins(k, 4, 50))
+    for i in range(4):
+        expect = np.asarray(hash_to_bins(k, i + 1, 50))
+        assert np.array_equal(cand[:, i], expect)

@@ -1,0 +1,60 @@
+"""porc_assign Pallas kernel vs jnp oracle: shape/dtype sweeps + bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics, streams
+from repro.kernels.porc_assign import porc_assign
+from repro.kernels.ref import ref_porc_assign
+
+
+@pytest.mark.parametrize("n_bins", [8, 16, 100, 256])
+@pytest.mark.parametrize("block", [64, 128])
+def test_kernel_matches_ref(n_bins, block):
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(1), 4096, 1000, 1.3)
+    a_ref, l_ref = ref_porc_assign(keys, n_bins, block=block, eps=0.05)
+    a_k, l_k = porc_assign(keys, n_bins, block=block, eps=0.05)
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_k))
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_k))
+
+
+@pytest.mark.parametrize("z", [0.5, 1.0, 1.6])
+def test_imbalance_bounded(z):
+    n, m, eps = 64, 8192, 0.05
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(2), m, 2000, z)
+    a, load = porc_assign(keys, n, eps=eps)
+    # capacity bound holds up to block staleness (≤ 1 block per bin)
+    assert float(load.max()) <= (1 + eps) * m / n + 128
+
+
+def test_continuation_equals_one_shot():
+    """Routing in two calls with (m0, load0) == one call."""
+    n = 32
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(3), 2048, 500, 1.2)
+    a_full, l_full = ref_porc_assign(keys, n, eps=0.05)
+    a1, l1 = ref_porc_assign(keys[:1024], n, eps=0.05)
+    a2, l2 = ref_porc_assign(keys[1024:], n, eps=0.05, load0=l1, m0=1024.0)
+    np.testing.assert_array_equal(np.asarray(a_full),
+                                  np.concatenate([a1, a2]))
+    np.testing.assert_allclose(np.asarray(l_full), np.asarray(l2))
+
+
+def test_load_equals_histogram():
+    n = 16
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(4), 1024, 200, 1.0)
+    a, load = porc_assign(keys, n)
+    hist = np.asarray(metrics.loads(a, n))
+    np.testing.assert_allclose(np.asarray(load), hist)
+
+
+def test_memory_vs_shuffle():
+    """PoRC replication stays well below shuffle grouping."""
+    from repro.core import partitioners as P
+    n, m = 50, 16384
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(5), m, 1000, 1.2)
+    a, _ = porc_assign(keys, n, eps=0.05)
+    mem_porc = int(metrics.memory_footprint(a, keys, n, 1000))
+    mem_sg = int(metrics.memory_footprint(
+        P.shuffle_grouping(keys, n), keys, n, 1000))
+    assert mem_porc < 0.6 * mem_sg

@@ -1,0 +1,146 @@
+"""Per-architecture smoke: reduced config, one forward/train step on CPU,
+shape + finiteness assertions; prefill↔decode cache consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model_zoo as zoo
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.bfloat16),
+                "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        return {"patches": jax.random.normal(
+                    key, (B, cfg.n_patches, cfg.vision_dim), jnp.bfloat16),
+                "tokens": jax.random.randint(key, (B, S - cfg.n_patches),
+                                             0, cfg.vocab)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_loss_finite(arch):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    loss = jax.jit(lambda p, b: zoo.loss_fn(p, cfg, b))(
+        params, _batch(cfg, key))
+    assert np.isfinite(float(loss))
+    # random-init CE ≈ ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_reduces_loss(arch):
+    from repro import optim
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    opt = optim.init(params)
+    ocfg = optim.AdamWConfig(lr_peak=3e-3, warmup_steps=1, total_steps=10,
+                             weight_decay=0.0)
+    batch = _batch(cfg, key)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(lambda q: zoo.loss_fn(q, cfg, batch))(p)
+        p, o, _ = optim.update(p, g, o, ocfg)
+        return p, o, loss
+
+    losses = []
+    for _ in range(4):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_step_shapes(arch):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    cache = zoo.init_cache(cfg, B, 32)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: zoo.decode_step(p, cfg, c, t))(params, cache, tok)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "internlm2-20b",
+                                  "qwen3-moe-235b-a22b", "mamba2-130m",
+                                  "zamba2-2.7b", "internvl2-2b"])
+def test_prefill_then_decode_consistency(arch):
+    """prefill(prompt) ≡ prefill(prompt[:-1]) + decode(prompt[-1]).
+
+    This validates the KV-cache/recurrent-state priming end to end.
+    """
+    import dataclasses
+    cfg = configs.get_smoke_config(arch)
+    if cfg.family == "moe":
+        # remove routing contention: capacity-bounded prefill vs
+        # uncontended decode legitimately route overflow slots
+        # differently (the CG semantics); here we test cache priming.
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=64.0))
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    full = dict(batch)
+    logits_full, _ = jax.jit(
+        lambda p, b: zoo.prefill_step(p, cfg, b))(params, full)
+
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, :-1]
+    last = batch["tokens"][:, -1:]
+    _, cache = jax.jit(
+        lambda p, b: zoo.prefill_step(p, cfg, b, pad_to=S))(params, short)
+    logits_inc, _ = jax.jit(
+        lambda p, c, t: zoo.decode_step(p, cfg, c, t))(params, cache, last)
+
+    a = np.asarray(logits_full, np.float32)
+    b = np.asarray(logits_inc, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 5e-2, f"prefill/decode mismatch rel={rel}"
+
+
+def test_longctx_cache_gemma3():
+    """gemma3 long-context decode path: ring-buffer local caches."""
+    cfg = configs.get_smoke_config("gemma3-1b")
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    from repro.models import transformer
+    cache = transformer.init_longctx_cache(cfg, B, 128)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    step = jax.jit(lambda p, c, t: zoo.decode_step(p, cfg, c, t))
+    for i in range(cfg.sliding_window + 4):   # wrap the ring buffer
+        logits, cache = step(params, cache, tok)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["pos"]) == cfg.sliding_window + 4
+
+
+def test_longctx_matches_uniform_decode():
+    """Ring-buffer decode ≡ uniform-cache decode for gemma3."""
+    cfg = configs.get_smoke_config("gemma3-1b")
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(cfg, key)
+    from repro.models import transformer
+    c_ring = transformer.init_longctx_cache(cfg, B, 64)
+    c_uni = zoo.init_cache(cfg, B, 64)
+    ring = jax.jit(lambda p, c, t: transformer.decode_step_longctx(p, cfg, c, t))
+    uni = jax.jit(lambda p, c, t: transformer.decode_step(p, cfg, c, t))
+    toks = jax.random.randint(key, (20, B, 1), 0, cfg.vocab)
+    for i in range(20):
+        lr, c_ring = ring(params, c_ring, toks[i])
+        lu, c_uni = uni(params, c_uni, toks[i])
+    rel = (np.abs(np.asarray(lr) - np.asarray(lu)).max()
+           / (np.abs(np.asarray(lu)).max() + 1e-9))
+    assert rel < 2e-2, rel

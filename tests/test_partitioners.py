@@ -1,0 +1,93 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics, partitioners as P, streams
+
+N_KEYS = 2000
+M = 30_000
+
+
+@pytest.fixture(scope="module")
+def zipf_keys():
+    return streams.sample_zipf_stream(jax.random.PRNGKey(0), M, N_KEYS, 1.2)
+
+
+@pytest.mark.parametrize("scheme", P.ALL_SCHEMES)
+def test_assignment_in_range(zipf_keys, scheme):
+    n = 20
+    a = np.asarray(P.route(scheme, zipf_keys, n))
+    assert a.shape == (M,)
+    assert a.min() >= 0 and a.max() < n
+
+
+def test_kg_is_per_key_deterministic(zipf_keys):
+    a = np.asarray(P.key_grouping(zipf_keys, 16))
+    keys = np.asarray(zipf_keys)
+    for k in np.unique(keys[:200]):
+        assert len(np.unique(a[keys == k])) == 1
+
+
+def test_sg_perfectly_balanced(zipf_keys):
+    n = 16
+    a = P.shuffle_grouping(zipf_keys, n)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() - L.min() <= 1
+
+
+def test_pkg_at_most_two_bins_per_key(zipf_keys):
+    a = np.asarray(P.partial_key_grouping(zipf_keys, 16))
+    keys = np.asarray(zipf_keys)
+    for k in np.unique(keys[:200]):
+        assert len(np.unique(a[keys == k])) <= 2
+
+
+def test_potc_near_perfect_balance(zipf_keys):
+    n = 16
+    caps = jnp.ones(n) / n
+    imb = float(metrics.normalized_imbalance(
+        P.power_of_two_choices(zipf_keys, n), caps))
+    assert imb < 0.01
+
+
+@pytest.mark.parametrize("eps", [0.01, 0.05, 0.1])
+def test_porc_imbalance_bounded_by_eps(zipf_keys, eps):
+    """Paper §VI-A: I(m) ≤ eps·(m/n)."""
+    n = 20
+    a = P.power_of_random_choices(zipf_keys, n, eps=eps)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() <= (1 + eps) * M / n + 1
+
+
+def test_ch_load_bounded(zipf_keys):
+    n = 20
+    eps = 0.05
+    a = P.consistent_hashing_bounded(zipf_keys, n, eps=eps)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() <= (1 + eps) * M / n + 1
+
+
+def test_porc_memory_below_sg_and_ch(zipf_keys):
+    """Paper claim: PoRC memory ≈ KG ≪ CH < SG/PoTC."""
+    n = 50
+    mem = {s: int(metrics.memory_footprint(
+        P.route(s, zipf_keys, n, eps=0.05), zipf_keys, n, N_KEYS))
+        for s in ("KG", "SG", "PORC", "CH")}
+    assert mem["KG"] <= mem["PORC"] <= mem["CH"] <= mem["SG"]
+
+
+def test_kg_imbalance_grows_with_skew():
+    n = 20
+    caps = jnp.ones(n) / n
+    imbs = []
+    for z in (0.4, 1.0, 1.6):
+        ks = streams.sample_zipf_stream(jax.random.PRNGKey(1), M, N_KEYS, z)
+        imbs.append(float(metrics.normalized_imbalance(
+            P.key_grouping(ks, n), caps)))
+    assert imbs[0] < imbs[1] < imbs[2]
+
+
+def test_route_unknown_scheme_raises(zipf_keys):
+    with pytest.raises(ValueError):
+        P.route("NOPE", zipf_keys, 4)

@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partitioners as P, simulation, streams
+
+M = 100_000
+N = 10
+SLOT = 10_000
+
+
+def _keys(z=1.1):
+    return streams.sample_zipf_stream(jax.random.PRNGKey(0), M, 3000, z)
+
+
+def test_sg_stable_on_homogeneous():
+    caps = jnp.full((N,), 1.25 / N)     # rho = 0.8
+    res = simulation.simulate_queues(P.shuffle_grouping(_keys(), N),
+                                     caps, N, SLOT)
+    assert float(res.queue_spread[-1]) <= 1.0
+    assert float(res.imbalance[-1]) < 0.01
+
+
+def test_kg_diverges_on_skew():
+    caps = jnp.full((N,), 1.25 / N)
+    res = simulation.simulate_queues(P.key_grouping(_keys(1.4), N),
+                                     caps, N, SLOT)
+    qs = np.asarray(res.queue_spread)
+    assert qs[-1] > qs[0]
+    assert qs[-1] > 1000       # hot worker's queue grows without bound
+
+
+def test_throughput_capped_by_capacity():
+    caps = jnp.full((N,), 0.05)         # total service 0.5 < arrival 1.0
+    res = simulation.simulate_queues(P.shuffle_grouping(_keys(), N),
+                                     caps, N, SLOT)
+    thr = np.asarray(res.throughput)
+    assert np.all(thr <= 0.5 + 1e-6)
+
+
+def test_queue_conservation():
+    """Σ drained + final queues == arrivals."""
+    caps = jnp.full((N,), 1.0 / N)      # rho = 1.0 exactly
+    a = P.key_grouping(_keys(1.2), N)
+    res = simulation.simulate_queues(a, caps, N, SLOT)
+    drained = float(np.sum(np.asarray(res.throughput)) * SLOT)
+    final_q = float(np.sum(np.asarray(res.final_queues)))
+    assert abs(drained + final_q - M) < 1.0
+
+
+def test_deployment_hetero_throughput():
+    """Fig 15: under global backpressure, capacity-oblivious routing
+    (KG/SG) binds throughput at the cpulimit'ed workers; a
+    capacity-proportional assignment sustains more."""
+    keys = _keys(1.3)
+    frac = np.ones(N)
+    frac[:2] = 0.3
+    fr = jnp.asarray(frac, jnp.float32)
+    offered = float(frac.sum()) / (0.5e-3) * 0.75
+    kg = simulation.simulate_deployment(
+        P.key_grouping(keys, N), N, 0.5, fr, offered_rate_per_s=offered)
+    sg = simulation.simulate_deployment(
+        P.shuffle_grouping(keys, N), N, 0.5, fr, offered_rate_per_s=offered)
+    # capacity-proportional routing (what CG converges to)
+    probs = np.asarray(frac / frac.sum())
+    rng = np.random.default_rng(0)
+    cap_prop = jnp.asarray(rng.choice(N, size=keys.shape[0], p=probs),
+                           jnp.int32)
+    cg_like = simulation.simulate_deployment(
+        cap_prop, N, 0.5, fr, offered_rate_per_s=offered)
+    assert float(cg_like.throughput) > 1.5 * float(kg.throughput)
+    assert float(cg_like.throughput) > 1.5 * float(sg.throughput)
+    assert float(kg.mean_latency_ms) > float(cg_like.mean_latency_ms)
