@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import cg, partitioners as P, simulation, streams
 
-from .common import fmt, table
+from .common import fmt, record, table
 
 WORKERS = 24
 
@@ -27,6 +27,8 @@ def _assignments(keys, caps):
     out = {"KG": P.key_grouping(keys, WORKERS),
            "PKG": P.partial_key_grouping(keys, WORKERS),
            "SG": P.shuffle_grouping(keys, WORKERS)}
+    # runtime block path (block_size=128): dynamics figures are
+    # robust to block staleness; precision figures pin block_size=0
     res = cg.run(cg.CGConfig(n_workers=WORKERS, alpha=20, eps=0.01,
                              slot_len=5_000, max_moves_per_slot=16),
                  keys, caps)
@@ -61,6 +63,10 @@ def run(m: int = 200_000, quick: bool = False):
             row = [sms]
             for name in ("KG", "PKG", "SG", "CG"):
                 r = res[name]
+                record("deployment", scenario=tag, service_ms=sms,
+                       scheme=name, msgs_per_sec=float(r.throughput),
+                       mean_latency_ms=float(r.mean_latency_ms),
+                       p99_latency_ms=float(r.p99_latency_ms))
                 row.append(fmt(float(r.throughput) / 1000, 1))
                 row.append(fmt(float(r.mean_latency_ms), 2))
             cgr, kgr = res["CG"], res["KG"]

@@ -27,6 +27,8 @@ def run(m: int = 300_000, quick: bool = False):
 
     kg = simulation.simulate_queues(P.key_grouping(keys, n), capsj, n, SLOT)
     sg = simulation.simulate_queues(P.shuffle_grouping(keys, n), capsj, n, SLOT)
+    # runtime block path (block_size=128): dynamics figures are
+    # robust to block staleness; precision figures pin block_size=0
     res = cg.run(cg.CGConfig(n_workers=n, alpha=20, eps=0.01, slot_len=SLOT,
                              max_moves_per_slot=16), keys, capsj)
 

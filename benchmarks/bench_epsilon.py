@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core import cg, metrics
 
-from .common import fmt, table, wp_keys
+from .common import fmt, record, table, wp_keys
 
 
 def run(m: int = 200_000, quick: bool = False):
@@ -20,20 +20,24 @@ def run(m: int = 200_000, quick: bool = False):
     caps = jnp.full((n,), 1.25 / n)        # homogeneous, ρ = 0.8
     rows = []
     for eps in epss:
+        # block_size=0: the ε sweep measures the oracle's (1+ε) bound;
+        # block staleness (~block/mean-load) would floor it below ε≈0.02
         cfgv = cg.CGConfig(n_workers=n, alpha=alpha, eps=eps,
-                           slot_len=10_000, inner="PORC")
+                           slot_len=10_000, inner="PORC", block_size=0)
         res = cg.run(cfgv, keys, caps)
         imb = float(metrics.normalized_imbalance(
             res.assignment, jnp.ones(n) / n))
         mem = int(metrics.memory_footprint(res.assignment, keys, n, n_keys))
+        record("epsilon", eps=eps, imbalance=imb, memory=mem)
         rows.append([eps, fmt(imb, 4), mem])
     for inner in ("KG", "SG"):
         cfgv = cg.CGConfig(n_workers=n, alpha=alpha, eps=0.01,
-                           slot_len=10_000, inner=inner)
+                           slot_len=10_000, inner=inner, block_size=0)
         res = cg.run(cfgv, keys, caps)
         imb = float(metrics.normalized_imbalance(
             res.assignment, jnp.ones(n) / n))
         mem = int(metrics.memory_footprint(res.assignment, keys, n, n_keys))
+        record("epsilon", inner=inner, imbalance=imb, memory=mem)
         rows.append([f"inner={inner}", fmt(imb, 4), mem])
     print(table("Fig 6 — ε trade-off (CG, 10 workers × 10 VWs, WP)",
                 ["eps", "imbalance", "memory(keys)"], rows))

@@ -29,6 +29,10 @@ def run(m: int = 300_000, quick: bool = False):
     keys = wp_keys(m)
     n = 10
 
+    # CG runs on the runtime block path (CGConfig.block_size=128):
+    # this figure measures queue/latency *dynamics*, which hold within
+    # block staleness (verified vs the exact oracle); imbalance-precision
+    # figures (epsilon, schemes_workers) pin block_size=0 instead.
     # ---- Fig 9: homogeneous ----
     caps = jnp.full((n,), 1.25 / n)
     kg = simulation.simulate_queues(P.key_grouping(keys, n), caps, n, SLOT)

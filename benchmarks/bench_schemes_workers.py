@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 from repro.core import cg, metrics, partitioners as P
 
-from .common import fmt, table, wp_keys
+from .common import fmt, record, table, wp_keys
 
 SCHEMES = ("KG", "PKG", "POTC", "CH", "PORC", "SG")
 
@@ -24,15 +24,23 @@ def run(m: int = 200_000, quick: bool = False):
             # paper setup: schemes run over n×alpha virtual-worker bins
             a_vw = P.route(s, keys, vws, eps=0.01)
             a = (a_vw % n).astype(jnp.int32)       # VW → worker (uniform)
-            row_i.append(fmt(float(metrics.normalized_imbalance(a, caps)), 3))
-            row_m.append(int(metrics.memory_footprint(a, keys, n, n_keys)))
+            imb = float(metrics.normalized_imbalance(a, caps))
+            mem = int(metrics.memory_footprint(a, keys, n, n_keys))
+            record("schemes_workers", scheme=s, n_workers=n,
+                   imbalance=imb, memory=mem)
+            row_i.append(fmt(imb, 3))
+            row_m.append(mem)
+        # block_size=0: this figure compares CG's *imbalance* against the
+        # schemes at eps=0.01, below the block path's staleness floor
         cfgv = cg.CGConfig(n_workers=n, alpha=alpha, eps=0.01,
-                           slot_len=10_000)
+                           slot_len=10_000, block_size=0)
         res = cg.run(cfgv, keys, jnp.full((n,), 1.25 / n))
-        row_i.append(fmt(float(metrics.normalized_imbalance(
-            res.assignment, caps)), 3))
-        row_m.append(int(metrics.memory_footprint(
-            res.assignment, keys, n, n_keys)))
+        imb_cg = float(metrics.normalized_imbalance(res.assignment, caps))
+        mem_cg = int(metrics.memory_footprint(res.assignment, keys, n, n_keys))
+        record("schemes_workers", scheme="CG", n_workers=n,
+               imbalance=imb_cg, memory=mem_cg)
+        row_i.append(fmt(imb_cg, 3))
+        row_m.append(mem_cg)
         rows_i.append(row_i)
         rows_m.append(row_m)
     print(table("Fig 7/8a — normalized imbalance vs #workers (WP)",

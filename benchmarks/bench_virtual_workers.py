@@ -24,6 +24,8 @@ def run(m: int = 300_000, quick: bool = False):
                        jnp.float32)
     rows = []
     for a in alphas:
+        # runtime block path (block_size=128): dynamics figures are
+        # robust to block staleness; precision figures pin block_size=0
         cfgv = cg.CGConfig(n_workers=n, alpha=a, eps=0.01, slot_len=10_000,
                            max_moves_per_slot=8)
         res = cg.run(cfgv, keys, caps)

@@ -1,6 +1,17 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Besides table formatting, this module is the *results emitter*: the
+driver (``benchmarks/run.py``) calls :func:`start_run` once, bench
+modules append structured rows via :func:`record`, the driver stamps
+per-figure wall time via :func:`note_timing` and finally
+:func:`write_results` dumps one ``BENCH_results.json`` that CI archives
+as the regression signal (wall time, msgs/sec, imbalance per figure).
+Standalone module runs (``python -m benchmarks.bench_x``) skip emission
+— every helper is a no-op until ``start_run`` is called.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -8,6 +19,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics, partitioners as P, streams
+
+_RUN: dict | None = None
+
+
+def start_run(meta: dict) -> None:
+    """Begin collecting results for one driver invocation."""
+    global _RUN
+    _RUN = {"meta": dict(meta), "benchmarks": {}}
+
+
+def record(bench: str, **fields) -> None:
+    """Append one structured result row for figure/bench ``bench``."""
+    if _RUN is None:
+        return
+    entry = _RUN["benchmarks"].setdefault(bench, {})
+    entry.setdefault("records", []).append(fields)
+
+
+def note_timing(bench: str, seconds: float) -> None:
+    if _RUN is None:
+        return
+    _RUN["benchmarks"].setdefault(bench, {})["wall_time_s"] = round(seconds, 3)
+
+
+def write_results(path: str) -> str | None:
+    """Dump the collected run to ``path`` (JSON). Returns the path."""
+    if _RUN is None:
+        return None
+    _RUN["meta"]["total_wall_time_s"] = round(
+        sum(b.get("wall_time_s", 0.0) for b in _RUN["benchmarks"].values()), 3)
+    with open(path, "w") as f:
+        json.dump(_RUN, f, indent=1, default=str)
+    return path
 
 
 def table(title: str, headers: list[str], rows: list[list]) -> str:

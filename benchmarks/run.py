@@ -1,19 +1,29 @@
 """Benchmark driver: one module per paper figure + roofline.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+                                          [--out BENCH_results.json]
+
+Every run writes a single ``BENCH_results.json`` (per-figure wall time
+plus the structured rows each module records — msgs/sec, imbalance,
+memory) which CI uploads as an artifact; diffing those files across
+commits is the benchmark regression signal.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import platform
 import time
+
+import jax
 
 from . import (bench_deployment, bench_dynamic, bench_epsilon,
                bench_moe_router, bench_porc_schemes, bench_queue,
                bench_schemes_workers, bench_sources,
-               bench_virtual_workers, roofline)
+               bench_virtual_workers, common, roofline)
 
 ALL = [
-    ("porc_schemes", bench_porc_schemes),      # Fig 4
+    ("porc_schemes", bench_porc_schemes),      # Fig 4 + block-path gate
     ("epsilon", bench_epsilon),                # Fig 6
     ("schemes_workers", bench_schemes_workers),  # Fig 7/8
     ("queue", bench_queue),                    # Fig 9/10
@@ -30,19 +40,46 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="BENCH_results.json",
+                    help="results JSON path ('' disables)")
     args = ap.parse_args()
+    names = [n for n, _ in ALL]
+    if args.only and args.only not in names:
+        raise SystemExit(f"unknown --only {args.only!r}; "
+                         f"choose from: {', '.join(names)}")
+    common.start_run({
+        "quick": args.quick,
+        "only": args.only,
+        "backend": jax.default_backend(),
+        "device": jax.devices()[0].device_kind,
+        "platform": platform.platform(),
+        "started_unix": round(time.time(), 1),
+    })
     t0 = time.time()
+    failed = []
     for name, mod in ALL:
         if args.only and args.only != name:
             continue
         t = time.time()
         print(f"\n{'='*72}\n[{name}]")
+        accepts_quick = "quick" in inspect.signature(mod.run).parameters
+        err = None
         try:
-            mod.run(quick=args.quick)
-        except TypeError:
-            mod.run()
-        print(f"[{name}] done in {time.time()-t:.1f}s", flush=True)
+            mod.run(quick=args.quick) if accepts_quick else mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the sweep going
+            err = f"{type(e).__name__}: {e}"
+            failed.append(name)
+            common.record(name, error=err)
+        common.note_timing(name, time.time() - t)
+        status = "done in" if err is None else "FAILED after"
+        print(f"[{name}] {status} {time.time()-t:.1f}s"
+              + (f": {err}" if err else ""), flush=True)
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+    if args.out:
+        path = common.write_results(args.out)
+        print(f"wrote {path}")
+    if failed:
+        raise SystemExit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,9 @@ PAPER_CG = CGConfig(
     n_workers=10, alpha=10, eps=0.01,
     theta_busy=0.85, theta_idle=0.75,
     slot_len=10_000, max_moves_per_slot=8, inner="PORC",
+    block_size=0,   # the paper routes one message per unit time — keep
+                    # the exact oracle here; block_size>1 is the runtime
+                    # fast path with its own staleness floor
 )
 
 RHO = 0.8                       # provisioning point (workers at 80%)

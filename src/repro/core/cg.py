@@ -25,6 +25,12 @@ Model fidelity notes
   affect only *future* messages — no message migration (§V-C).
 * **Queues**: each worker drains ``c_w·slot_len`` messages per slot from
   an unbounded FIFO — the queueing model of §IV used for Fig 9/10/12/13.
+* **Block-parallel routing** (``block_size``): the paper defines PoRC
+  one-message-per-unit-time; the runtime routes ``block_size`` messages
+  per load snapshot (``repro.kernels.ref.ref_porc_snapshot``) — the
+  §V-C eventual-consistency license, same as sources with local load
+  views. ``block_size=0`` keeps the exact per-message oracle;
+  ``block_size=1`` takes the block path and is bit-identical to it.
 """
 from __future__ import annotations
 
@@ -46,6 +52,9 @@ class CGConfig(NamedTuple):
     slot_len: int = 10_000        # messages per time slot t0
     max_moves_per_slot: int = 8   # paired (busy→idle) moves per slot
     inner: str = "PORC"           # VW-level scheme: PORC | KG | SG
+    block_size: int = 128         # PoRC messages per load snapshot;
+                                  # 0 = exact per-message oracle, 1 = block
+                                  # path (bit-identical to the oracle)
 
 
 class CGState(NamedTuple):
@@ -92,6 +101,17 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
         vw = ((t_offset.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32)) % V)
         vw_load = vw_load.at[vw].add(1.0)
         return vw_load, vw
+
+    if cfg.block_size >= 1:
+        # Block-parallel PoRC: route the slot in blocks of B messages
+        # against per-block load snapshots (eventually-consistent, the
+        # kernels' block-synchronous semantics). Bit-identical to the
+        # sequential path below when block_size == 1.
+        from repro.kernels.ref import PorcState, ref_porc_route
+        state = PorcState(load=vw_load, routed=t_offset)
+        vw, state = ref_porc_route(keys, V, block=cfg.block_size,
+                                   eps=cfg.eps, state=state)
+        return state.load, vw
 
     # PoRC (Alg. 1) continuing across slots: capacity uses global time.
     max_probes = 4 * V

@@ -18,8 +18,11 @@ CH    consistent hashing bounded load   clockwise probe < cap   ring + load
 PoRC  power of random choices (Alg. 1)  salted probe < cap      load state
 GREEDY_D  Greedy-d (§VI-A-1)            d key-choices, argmin   load state
 
-The batch-parallel (eventually-consistent) PoRC lives in
-``repro.kernels`` — this module is the exact sequential oracle.
+Each load-stateful scheme (PKG/PoTC/PoRC) also has a ``*_blocked``
+block-parallel variant routing B messages per load snapshot —
+bit-identical to the oracle at B=1, eventually consistent above (the
+staleness license of PKG / "The Power of Both Choices"). The PoRC block
+engine itself lives in ``repro.kernels`` (Pallas kernel + jnp oracle).
 """
 from __future__ import annotations
 
@@ -129,6 +132,72 @@ def power_of_random_choices(keys: jnp.ndarray, n_bins: int,
 
 
 # ---------------------------------------------------------------------------
+# Block-parallel variants — eventually-consistent load state
+# ---------------------------------------------------------------------------
+#
+# Each block of B messages is routed against the load snapshot taken at
+# the block boundary (PKG/"Power of Both Choices" show load-state routing
+# tolerates slightly stale estimates). With block=1 every variant is
+# bit-identical to its sequential oracle above; with block>1 the routing
+# is the block-synchronous semantics of ``repro.kernels``.
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "d", "block"))
+def _greedy_blocked_core(ids: jnp.ndarray, load0: jnp.ndarray, n_bins: int,
+                         d: int, block: int):
+    """Greedy-d over full blocks: every message in a block picks the
+    argmin-load candidate against the block-start snapshot."""
+    nb = ids.shape[0] // block
+    salts = jnp.arange(1, d + 1, dtype=jnp.uint32)
+    cand = hash_to_bins(ids[:, None], salts, n_bins).reshape(nb, block, d)
+
+    def blk(load, c):
+        pick = c[jnp.arange(c.shape[0]), jnp.argmin(load[c], axis=1)]
+        return load.at[pick].add(1), pick
+
+    load, picks = jax.lax.scan(blk, load0, cand)
+    return picks.reshape(-1), load
+
+
+def greedy_d_blocked(keys: jnp.ndarray, n_bins: int, d: int = 2,
+                     on_message_id: bool = False,
+                     block: int = 128) -> jnp.ndarray:
+    """Block-parallel Greedy-d (batched PKG / PoTC). Any stream length;
+    a trailing partial block runs as power-of-two sub-blocks (see
+    ``repro.kernels.ref.block_spans``)."""
+    from repro.kernels.ref import route_in_spans  # deferred: core ← kernels
+    m = keys.shape[0]
+    ids = (jnp.arange(m, dtype=jnp.int32) if on_message_id
+           else keys.astype(jnp.int32))
+    assign, _ = route_in_spans(
+        ids, block, jnp.zeros(n_bins, jnp.int32),
+        lambda sub, blk, load: _greedy_blocked_core(sub, load, n_bins, d, blk))
+    return assign
+
+
+def partial_key_grouping_blocked(keys: jnp.ndarray, n_bins: int,
+                                 block: int = 128) -> jnp.ndarray:
+    """Batched PKG = block-parallel Greedy-2 over keys."""
+    return greedy_d_blocked(keys, n_bins, d=2, on_message_id=False, block=block)
+
+
+def power_of_two_choices_blocked(keys: jnp.ndarray, n_bins: int,
+                                 block: int = 128) -> jnp.ndarray:
+    """Batched PoTC = block-parallel Greedy-2 over message ids."""
+    return greedy_d_blocked(keys, n_bins, d=2, on_message_id=True, block=block)
+
+
+def power_of_random_choices_blocked(keys: jnp.ndarray, n_bins: int,
+                                    eps: float = 0.01,
+                                    block: int = 128) -> jnp.ndarray:
+    """Batched PoRC: Alg. 1 against a per-block load snapshot, capacity
+    evaluated at the block boundary. Delegates to the kernel block
+    engine (``repro.kernels.ref``), which carries state across blocks."""
+    from repro.kernels.ref import ref_porc_route  # deferred: core ← kernels
+    assign, _ = ref_porc_route(keys, n_bins, block=block, eps=eps)
+    return assign
+
+
+# ---------------------------------------------------------------------------
 # CH — consistent hashing with bounded loads (Mirrokni et al.)
 # ---------------------------------------------------------------------------
 
@@ -188,18 +257,33 @@ def consistent_hashing_bounded(keys: jnp.ndarray, n_bins: int,
 # ---------------------------------------------------------------------------
 
 def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
-          eps: float = 0.01) -> jnp.ndarray:
-    """Route a full stream with the named scheme (paper Table II symbols)."""
+          eps: float = 0.01, block_size: int | None = None) -> jnp.ndarray:
+    """Route a full stream with the named scheme (paper Table II symbols).
+
+    ``block_size=None`` uses the exact sequential oracles (one message
+    per unit time). Any ``block_size >= 1`` takes the block-parallel
+    fast path for the load-stateful schemes (PKG/PoTC/PoRC) —
+    bit-identical at block_size=1, eventually consistent above. KG/SG
+    are stateless (already fully parallel); CH walks a ring sequentially
+    and has no blocked variant, so both ignore ``block_size``.
+    """
     scheme = scheme.upper()
     if scheme == "KG":
         return key_grouping(keys, n_bins)
     if scheme == "SG":
         return shuffle_grouping(keys, n_bins)
     if scheme == "PKG":
+        if block_size:
+            return partial_key_grouping_blocked(keys, n_bins, block=block_size)
         return partial_key_grouping(keys, n_bins)
     if scheme == "POTC":
+        if block_size:
+            return power_of_two_choices_blocked(keys, n_bins, block=block_size)
         return power_of_two_choices(keys, n_bins)
     if scheme == "PORC":
+        if block_size:
+            return power_of_random_choices_blocked(keys, n_bins, eps=eps,
+                                                   block=block_size)
         return power_of_random_choices(keys, n_bins, eps=eps)
     if scheme == "CH":
         return consistent_hashing_bounded(keys, n_bins, eps=eps)
@@ -207,3 +291,4 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
 
 
 ALL_SCHEMES = ("KG", "SG", "PKG", "POTC", "CH", "PORC")
+BLOCKED_SCHEMES = ("PKG", "POTC", "PORC")

@@ -20,10 +20,11 @@ def _on_tpu() -> bool:
 
 
 def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
-                block: int = 128, eps: float = 0.05, m0: float = 0.0):
+                block: int = 128, eps: float = 0.05, m0: float = 0.0,
+                load0: jnp.ndarray | None = None):
     """Block-synchronous PoRC routing (paper Alg. 1, TPU-adapted)."""
     return _porc_assign(keys, n_bins, d=d, block=block, eps=eps, m0=m0,
-                        interpret=not _on_tpu())
+                        load0=load0, interpret=not _on_tpu())
 
 
 def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,

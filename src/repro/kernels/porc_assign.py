@@ -39,13 +39,14 @@ def _hash_to_bins(key, salt, n_bins):
     return (h % jnp.uint32(n_bins)).astype(jnp.int32)
 
 
-def _porc_kernel(m0_ref, keys_ref, assign_ref, loadout_ref, load_ref, *,
+def _porc_kernel(m0_ref, load0_ref, keys_ref, assign_ref, loadout_ref,
+                 load_ref, *,
                  n_bins: int, d: int, block: int, eps: float, n_blocks: int):
     b = pl.program_id(0)
 
     @pl.when(b == 0)
     def _init():
-        load_ref[...] = jnp.zeros_like(load_ref)
+        load_ref[...] = load0_ref[...]
 
     keys = keys_ref[...]
     load = load_ref[...]
@@ -95,6 +96,7 @@ def _porc_kernel(m0_ref, keys_ref, assign_ref, loadout_ref, load_ref, *,
                    static_argnames=("n_bins", "d", "block", "eps", "interpret"))
 def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
                 block: int = 128, eps: float = 0.05, m0: float = 0.0,
+                load0: jnp.ndarray | None = None,
                 interpret: bool = True):
     """Block-synchronous PoRC over a key stream.
 
@@ -104,6 +106,8 @@ def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
       d: probe depth (salted hash choices per key).
       eps: capacity slack — bin capacity is (1+eps)·m_t/n_bins.
       m0: messages already routed before this call (continuation).
+      load0: [n_bins] f32 per-bin loads carried in from a previous call
+        (continuation); zeros when omitted.
     Returns (assignment [M] int32, final_load [n_bins] f32).
     """
     if d is None:
@@ -114,11 +118,14 @@ def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
     kernel = functools.partial(_porc_kernel, n_bins=n_bins, d=d, block=block,
                                eps=eps, n_blocks=n_blocks)
     m0_arr = jnp.asarray([m0], jnp.float32)
+    load0_arr = (jnp.zeros((n_bins,), jnp.float32) if load0 is None
+                 else load0.astype(jnp.float32))
     assign, load = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((n_bins,), lambda b: (0,)),
             pl.BlockSpec((block,), lambda b: (b,)),
         ],
         out_specs=[
@@ -131,5 +138,5 @@ def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
         ],
         scratch_shapes=[pltpu.VMEM((n_bins,), jnp.float32)],
         interpret=interpret,
-    )(m0_arr, keys)
+    )(m0_arr, load0_arr, keys)
     return assign, load

@@ -13,6 +13,7 @@ ref_ssd_scan      Mamba-2 SSD recurrence (exact sequential scan)
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +93,179 @@ def ref_porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
     load, assign = jax.lax.scan(blk, load,
                                 (jnp.arange(nb, dtype=jnp.float32), kb))
     return assign.reshape(-1), load
+
+
+# ---------------------------------------------------------------------------
+# PoRC state carried across blocks / calls (the block-parallel runtime)
+# ---------------------------------------------------------------------------
+
+class PorcState(NamedTuple):
+    """Routing state threaded across blocks, slots, and batches.
+
+    ``load`` is the (eventually-consistent) per-bin message count and
+    ``routed`` the global message clock m_t that drives the capacity
+    (1+eps)·m_t/n — together they are everything Alg. 1 remembers.
+    """
+    load: jnp.ndarray     # [n_bins] f32
+    routed: jnp.ndarray   # []       f32
+
+
+def porc_state_init(n_bins: int) -> PorcState:
+    return PorcState(load=jnp.zeros(n_bins, jnp.float32),
+                     routed=jnp.zeros((), jnp.float32))
+
+
+def block_spans(m: int, block: int) -> list[tuple[int, int, int]]:
+    """(start, length, engine_block) spans covering an m-message stream.
+
+    Full blocks come as one span; the trailing remainder is decomposed
+    into powers of two. The jitted block engines specialize on
+    (length, block), so this bounds the distinct remainder programs at
+    O(log block) instead of one per possible remainder length — the
+    serving path sees arbitrary batch sizes every call.
+    """
+    spans = []
+    nb = m // block
+    off = nb * block
+    if nb:
+        spans.append((0, off, block))
+    rem = m - off
+    while rem:
+        p = 1 << (rem.bit_length() - 1)
+        spans.append((off, p, p))
+        off += p
+        rem -= p
+    return spans
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "eps", "chunk"))
+def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
+                      eps: float = 0.05, chunk: int = 8,
+                      load0: jnp.ndarray | None = None, m0: float = 0.0):
+    """Snapshot-probing PoRC: the block-parallel *fast path*.
+
+    Every message in a block independently walks its salted-probe chain
+    H(j‖1), H(j‖2), … against the load snapshot taken at the block
+    boundary and stops at the first bin below (1+eps)·m_t/n (m_t at
+    block end); loads update once per block. This is the paper's §V-C
+    eventual consistency — the same semantics as multiple sources
+    routing with local load views — so a bin can overshoot the capacity
+    by at most the number of duplicates of its keys inside one block.
+
+    Unlike the rank-sequential ``ref_porc_assign`` (which resolves
+    in-block contention rank by rank and therefore serializes ~max-key-
+    multiplicity steps per block), every probe here is a vectorized
+    gather, which is what makes the block path fast on CPU/TPU.
+
+    Probe budget: at block=1 the full 4·n_bins salted chain of Alg. 1
+    runs (lazily, in chunks of ``chunk`` salts) so the result is
+    bit-identical to the sequential oracle — the snapshot *is* the true
+    load. At block>1 each message gets a fixed budget of ``chunk``
+    probes per snapshot (hoisted out of the block scan entirely, since
+    they are load-independent); either way, exhausting the budget falls
+    back to the least-loaded snapshot bin, Alg. 1's fallback. A fixed
+    budget is the right trade at block>1 because a fresh snapshot
+    resolves ~everything within a few probes — paying a data-dependent
+    while-loop per block costs more than the rare deep chain saves.
+
+    Returns (assignment [M] int32, final load [n_bins] f32).
+    """
+    M = keys.shape[0]
+    assert M % block == 0, f"{M} % {block} != 0"
+    nb = M // block
+    kb = keys.reshape(nb, block)
+    max_probes = 4 * n_bins
+    load = jnp.zeros(n_bins, jnp.float32) if load0 is None else load0
+    # the first chunk of candidates is load-independent → hoist the
+    # hashing for the whole stream out of the per-block scan
+    salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
+    cand0 = hash_to_bins(kb[:, :, None], salts0[None, None, :], n_bins)
+
+    def resolve(load, cap, cand, salts, assign):
+        ok = (load[cand] < cap) & (salts <= max_probes)[None, :]
+        first = jnp.argmax(ok, axis=1)
+        pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+        hit = (assign < 0) & jnp.any(ok, axis=1)
+        return jnp.where(hit, pick, assign)
+
+    def blk(load, xs):
+        b, kblk, cblk = xs
+        cap = (1.0 + eps) * (m0 + (b + 1.0) * block) / n_bins
+        assign = resolve(load, cap, cblk, salts0,
+                         jnp.full((block,), -1, jnp.int32))
+
+        if block == 1:
+            # exactness: continue the salted chain to the oracle ceiling
+            def cond(c):
+                salt0, assign = c
+                return (salt0 <= max_probes) & jnp.any(assign < 0)
+
+            def probe_chunk(c):
+                salt0, assign = c
+                salts = salt0 + jnp.arange(chunk, dtype=jnp.uint32)
+                cand = hash_to_bins(kblk[:, None], salts[None, :], n_bins)
+                return salt0 + chunk, resolve(load, cap, cand, salts, assign)
+
+            _, assign = jax.lax.while_loop(
+                cond, probe_chunk, (jnp.uint32(1 + chunk), assign))
+
+        # probe budget exhausted: least-loaded snapshot bin (Alg. 1)
+        assign = jnp.where(assign < 0, jnp.argmin(load).astype(jnp.int32),
+                           assign)
+        return load.at[assign].add(1.0), assign
+
+    load, assign = jax.lax.scan(blk, load,
+                                (jnp.arange(nb, dtype=jnp.float32), kb, cand0))
+    return assign.reshape(-1), load
+
+
+def route_in_spans(keys: jnp.ndarray, block: int, carry, step):
+    """Drive a jitted block engine over ``block_spans`` of a stream.
+
+    ``step(sub_keys, engine_block, carry) -> (assignment, carry)`` is
+    called per span with the threaded carry (load state). Returns the
+    concatenated assignment and the final carry.
+    """
+    parts = []
+    for start, length, blk in block_spans(keys.shape[0], block):
+        a, carry = step(keys[start: start + length], blk, carry)
+        parts.append(a)
+    if not parts:
+        return jnp.zeros((0,), jnp.int32), carry
+    return (parts[0] if len(parts) == 1 else jnp.concatenate(parts)), carry
+
+
+def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
+                   eps: float = 0.05, state: PorcState | None = None,
+                   engine: str = "snapshot"):
+    """Route an arbitrary-length key stream in blocks of ``block``.
+
+    ``engine="snapshot"`` (the fast path) probes block-boundary load
+    snapshots via ``ref_porc_snapshot``; ``engine="strict"`` uses the
+    rank-sequential ``ref_porc_assign``, which never exceeds the
+    (1+eps) cap but serializes in-block contention (slower — use it
+    when the ε guarantee must hold exactly, e.g. tiny per-bin loads).
+    Either way a trailing partial block is routed as power-of-two
+    sub-blocks (caps at each sub-block end, bounded recompilation —
+    see ``block_spans``), so no padding keys ever pollute the load
+    state. With ``block=1`` both engines are bit-identical to the
+    sequential oracle ``partitioners.power_of_random_choices``.
+
+    Returns (assignment [M] int32, new PorcState).
+    """
+    if state is None:
+        state = porc_state_init(n_bins)
+    eng = {"snapshot": ref_porc_snapshot,
+           "strict": ref_porc_assign}[engine]
+
+    def step(sub, blk, carry):
+        load, routed = carry
+        a, load = eng(sub, n_bins, block=blk, eps=eps, load0=load, m0=routed)
+        return a, (load, routed + sub.shape[0])
+
+    assign, (load, routed) = route_in_spans(
+        keys, block, (state.load, state.routed), step)
+    return assign, PorcState(load=load, routed=routed)
 
 
 # ---------------------------------------------------------------------------

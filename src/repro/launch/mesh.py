@@ -27,6 +27,17 @@ def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def enter_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    jax >= 0.6 exposes ``jax.set_mesh``; on the 0.4.x line the ``Mesh``
+    object itself is the context manager with the same effect.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def data_axes(mesh) -> tuple:
     """The combined batch-sharding axes for this mesh."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -40,6 +40,8 @@ class CGRequestRouter:
     queue_hi: float = 0.85        # of max_queue → busy
     queue_lo: float = 0.5
     max_queue: int = 256
+    block_size: int = 128         # PoRC messages per load snapshot;
+                                  # 1 = exact per-message Alg. 1
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
@@ -49,7 +51,11 @@ class CGRequestRouter:
         self.moves = 0
 
     def route(self, key: int) -> int:
-        """PoRC over virtual replicas (Alg. 1), then owner lookup."""
+        """PoRC over virtual replicas (Alg. 1), then owner lookup.
+
+        Pure-python sequential oracle — ``route_batch`` with
+        ``block_size=1`` is bit-identical to a sequence of these calls.
+        """
         self.routed += 1
         cap = (1.0 + self.eps) * self.routed / self.n_virtual
         salt = 1
@@ -63,17 +69,29 @@ class CGRequestRouter:
         return int(self.vw_owner[vw])
 
     def route_batch(self, keys: np.ndarray) -> np.ndarray:
-        from repro.kernels.ref import ref_porc_assign
-        n = len(keys)
-        block = 128
-        pad = (-n) % block
-        padded = np.concatenate([keys, np.zeros(pad, np.int32)]).astype(np.int32)
-        assign_vw, load = ref_porc_assign(
-            jnp.asarray(padded), self.n_virtual, eps=self.eps,
-            load0=jnp.asarray(self.vw_load, jnp.float32), m0=float(self.routed))
-        self.vw_load = np.array(load)   # writable copy
-        self.routed += n
-        return self.vw_owner[np.asarray(assign_vw)[:n]]
+        """Block-parallel PoRC over virtual replicas (the default submit
+        path). Load state carries across calls; a trailing partial block
+        routes as power-of-two sub-blocks, so no padding keys ever
+        pollute the load state and arbitrary batch sizes compile only
+        O(log block_size) remainder programs."""
+        from repro.kernels.ref import PorcState, ref_porc_route
+        keys = np.asarray(keys, np.int32)
+        # The engine carries load/routed as f32: past 2^24 a +1.0 becomes
+        # a silent no-op and balancing would collapse onto "frozen" VWs.
+        # Rebase by the min load first (shifts the capacity check by only
+        # eps·base, and keeps every counter far from the f32 ceiling).
+        if self.vw_load.max() >= 2 ** 23:
+            base = float(self.vw_load.min())
+            self.vw_load = self.vw_load - base
+            self.routed -= int(base * self.n_virtual)
+        state = PorcState(load=jnp.asarray(self.vw_load, jnp.float32),
+                          routed=jnp.float32(self.routed))
+        assign_vw, state = ref_porc_route(
+            jnp.asarray(keys), self.n_virtual,
+            block=self.block_size, eps=self.eps, state=state)
+        self.vw_load = np.array(state.load)   # writable copy
+        self.routed += len(keys)
+        return self.vw_owner[np.asarray(assign_vw)]
 
     def rebalance(self, busy: list[int], idle: list[int]) -> int:
         """Paired moves: one virtual replica per (busy, idle) pair."""
@@ -103,8 +121,9 @@ class ServingEngine:
         self.latencies: list[float] = []
 
     def submit(self, key: int, payload) -> None:
-        r = self.router.route(key)
-        self.replicas[r].queue.append((time.monotonic(), payload))
+        """Single-request submit — routed through the batch path (a
+        batch of one is one block of one, i.e. exact Alg. 1)."""
+        self.submit_batch(np.asarray([key], np.int32), [payload])
 
     def submit_batch(self, keys: np.ndarray, payloads) -> None:
         assign = self.router.route_batch(np.asarray(keys, np.int32))

@@ -1,8 +1,25 @@
-"""Test hygiene: reset the global activation-sharding rules between
-tests so mesh-installing tests (dryrun) don't leak into model tests."""
+"""Test hygiene and shared stream sizing.
+
+* Resets the global activation-sharding rules between tests so
+  mesh-installing tests (dryrun) don't leak into model tests.
+* ``stream_len`` scales the synthetic key streams: the default tier-1
+  run uses reduced streams so the suite stays fast; set
+  ``REPRO_TEST_FULL_STREAMS=1`` (CI does this on main) to run the
+  paper-scale lengths.
+"""
+import os
+
 import pytest
 
 from repro.models.layers import set_act_sharding
+
+FULL_STREAMS = os.environ.get("REPRO_TEST_FULL_STREAMS", "") == "1"
+
+
+def stream_len(full: int, small: int) -> int:
+    """Pick the stream length for the current tier: ``small`` by
+    default, ``full`` when REPRO_TEST_FULL_STREAMS=1."""
+    return full if FULL_STREAMS else small
 
 
 @pytest.fixture(autouse=True)

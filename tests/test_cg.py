@@ -2,10 +2,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import stream_len
 
 from repro.core import cg, streams
 
-M = 200_000
+M = stream_len(200_000, 100_000)
 N_KEYS = 5000
 
 
@@ -87,3 +88,49 @@ def test_inner_scheme_variants(keys):
         cfg = cg.CGConfig(n_workers=6, alpha=5, slot_len=10_000, inner=inner)
         res = cg.run(cfg, keys[:100_000], _caps(6, 1, 1.0))
         assert np.asarray(res.assignment).max() < 6
+
+
+# ---------------------------------------------------------------------------
+# block-parallel routing path (CGConfig.block_size)
+# ---------------------------------------------------------------------------
+
+def test_block_path_b1_bit_identical_to_oracle(keys):
+    """block_size=1 must reproduce the per-message oracle bit-for-bit."""
+    sub = keys[:30_000]
+    caps = _caps(10, 3, 5.0)
+    cfg0 = cg.CGConfig(n_workers=10, slot_len=10_000, block_size=0)
+    cfg1 = cg.CGConfig(n_workers=10, slot_len=10_000, block_size=1)
+    r0, r1 = cg.run(cfg0, sub, caps), cg.run(cfg1, sub, caps)
+    np.testing.assert_array_equal(np.asarray(r0.assignment),
+                                  np.asarray(r1.assignment))
+    np.testing.assert_array_equal(np.asarray(r0.vw_assignment),
+                                  np.asarray(r1.vw_assignment))
+    np.testing.assert_allclose(np.asarray(r0.state.vw_load),
+                               np.asarray(r1.state.vw_load))
+    assert int(r0.moves) == int(r1.moves)
+
+
+@pytest.mark.parametrize("block_size", [64, 128, 1024])
+def test_block_path_divergence_bounded(keys, block_size):
+    """For B>1 the VW loads must stay inside the paper's (1+eps)
+    capacity envelope, up to one block of staleness per bin."""
+    eps = 0.05
+    cfg = cg.CGConfig(n_workers=10, alpha=10, eps=eps, slot_len=10_000,
+                      block_size=block_size)
+    res = cg.run(cfg, keys, _caps(10, 1, 1.0))
+    vw_load = np.asarray(res.state.vw_load)
+    V = cfg.n_workers * cfg.alpha
+    assert vw_load.max() <= (1 + eps) * len(keys) / V + block_size
+    assert vw_load.sum() == len(keys)            # every message placed
+
+
+def test_block_path_converges_like_oracle(keys):
+    """The fast path must keep CG's qualitative behavior: imbalance
+    decays on a heterogeneous cluster as pairing kicks in."""
+    cfg = cg.CGConfig(n_workers=10, alpha=10, eps=0.01, slot_len=10_000,
+                      block_size=128)
+    res = cg.run(cfg, keys, _caps(10, 3, 5.0))
+    early = float(np.mean(np.asarray(res.imbalance)[:3]))
+    late = float(np.mean(np.asarray(res.imbalance)[-3:]))
+    assert late < early
+    assert int(res.moves) > 0

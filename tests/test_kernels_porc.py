@@ -40,6 +40,73 @@ def test_continuation_equals_one_shot():
     np.testing.assert_allclose(np.asarray(l_full), np.asarray(l2))
 
 
+def test_pallas_kernel_continuation_equals_one_shot():
+    """The Pallas kernel carries (m0, load0) across calls like the ref."""
+    n = 32
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(3), 2048, 500, 1.2)
+    a_full, l_full = porc_assign(keys, n, eps=0.05)
+    a1, l1 = porc_assign(keys[:1024], n, eps=0.05)
+    a2, l2 = porc_assign(keys[1024:], n, eps=0.05, load0=l1, m0=1024.0)
+    np.testing.assert_array_equal(np.asarray(a_full),
+                                  np.concatenate([a1, a2]))
+    np.testing.assert_allclose(np.asarray(l_full), np.asarray(l2))
+
+
+# ---------------------------------------------------------------------------
+# snapshot-probing fast path (ref_porc_snapshot / ref_porc_route)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_b1_equals_sequential_oracle():
+    from repro.core import partitioners as P
+    from repro.kernels.ref import ref_porc_snapshot
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(6), 3000, 800, 1.3)
+    for eps in (0.01, 0.05):
+        a_seq = np.asarray(P.power_of_random_choices(keys, 24, eps=eps))
+        a_b1, _ = ref_porc_snapshot(keys, 24, block=1, eps=eps)
+        np.testing.assert_array_equal(a_seq, np.asarray(a_b1))
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_snapshot_envelope_and_conservation(block):
+    from repro.kernels.ref import ref_porc_snapshot
+    n, m, eps = 64, 8192, 0.05
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(7), m, 2000, 1.4)
+    a, load = ref_porc_snapshot(keys, n, block=block, eps=eps)
+    assert float(load.max()) <= (1 + eps) * m / n + block
+    np.testing.assert_allclose(np.asarray(load),
+                               np.asarray(metrics.loads(a, n)))
+
+
+@pytest.mark.parametrize("m", [0, 1, 127, 128, 301, 1000])
+def test_block_spans_cover_stream(m):
+    from repro.kernels.ref import block_spans
+    spans = block_spans(m, 128)
+    covered = 0
+    for start, length, blk in spans:
+        assert start == covered
+        assert length % blk == 0 and 1 <= blk <= 128
+        covered += length
+    assert covered == m
+    # remainder decomposition is bounded: at most log2(block)+1 spans
+    assert len(spans) <= 1 + 8
+
+
+def test_porc_route_state_threading():
+    """ref_porc_route: split calls with carried PorcState == one call
+    (blocks aligned), and partial blocks route exactly len(keys)."""
+    from repro.kernels.ref import ref_porc_route
+    n = 32
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(8), 1000, 300, 1.2)
+    a_full, s_full = ref_porc_route(keys, n, block=128, eps=0.05)
+    a1, s1 = ref_porc_route(keys[:512], n, block=128, eps=0.05)
+    a2, s2 = ref_porc_route(keys[512:], n, block=128, eps=0.05, state=s1)
+    np.testing.assert_array_equal(np.asarray(a_full),
+                                  np.concatenate([a1, a2]))
+    np.testing.assert_allclose(np.asarray(s_full.load), np.asarray(s2.load))
+    assert float(s_full.routed) == float(s2.routed) == 1000.0
+    assert float(s_full.load.sum()) == 1000.0
+
+
 def test_load_equals_histogram():
     n = 16
     keys = streams.sample_zipf_stream(jax.random.PRNGKey(4), 1024, 200, 1.0)

@@ -36,6 +36,7 @@ def test_loss_finite(arch):
     assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
 def test_train_step_reduces_loss(arch):
     from repro import optim

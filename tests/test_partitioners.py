@@ -2,11 +2,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import stream_len
 
 from repro.core import metrics, partitioners as P, streams
 
 N_KEYS = 2000
-M = 30_000
+M = stream_len(30_000, 20_000)
 
 
 @pytest.fixture(scope="module")
@@ -91,3 +92,51 @@ def test_kg_imbalance_grows_with_skew():
 def test_route_unknown_scheme_raises(zipf_keys):
     with pytest.raises(ValueError):
         P.route("NOPE", zipf_keys, 4)
+
+
+# ---------------------------------------------------------------------------
+# block-parallel variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", P.BLOCKED_SCHEMES)
+def test_blocked_b1_bit_identical_to_oracle(zipf_keys, scheme):
+    sub = zipf_keys[:5000]
+    a_seq = np.asarray(P.route(scheme, sub, 16, eps=0.05))
+    a_b1 = np.asarray(P.route(scheme, sub, 16, eps=0.05, block_size=1))
+    np.testing.assert_array_equal(a_seq, a_b1)
+
+
+@pytest.mark.parametrize("scheme", P.BLOCKED_SCHEMES)
+@pytest.mark.parametrize("block", [64, 128])
+def test_blocked_in_range_any_length(zipf_keys, scheme, block):
+    """Blocked variants accept lengths that are not block multiples."""
+    sub = zipf_keys[: 3 * block + 17]
+    a = np.asarray(P.route(scheme, sub, 16, block_size=block))
+    assert a.shape == (len(sub),)
+    assert a.min() >= 0 and a.max() < 16
+
+
+@pytest.mark.parametrize("block", [64, 256])
+def test_blocked_porc_envelope(zipf_keys, block):
+    """Block staleness never exceeds one block of overshoot per bin."""
+    n, eps = 20, 0.05
+    a = P.power_of_random_choices_blocked(zipf_keys, n, eps=eps, block=block)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() <= (1 + eps) * M / n + block
+    assert L.sum() == M
+
+
+def test_blocked_potc_balance(zipf_keys):
+    """Blocked PoTC stays near-balanced (within block staleness)."""
+    n, block = 16, 128
+    a = P.power_of_two_choices_blocked(zipf_keys, n, block=block)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() - L.min() <= 2 * block
+
+
+def test_blocked_pkg_two_bins_per_key(zipf_keys):
+    """Key-splitting property survives blocking: ≤ 2 bins per key."""
+    a = np.asarray(P.partial_key_grouping_blocked(zipf_keys, 16, block=128))
+    keys = np.asarray(zipf_keys)
+    for k in np.unique(keys[:200]):
+        assert len(np.unique(a[keys == k])) <= 2

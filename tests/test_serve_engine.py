@@ -1,0 +1,144 @@
+"""CGRequestRouter / ServingEngine: batch-vs-sequential equivalence and
+rebalance-under-skew regression coverage."""
+import numpy as np
+import pytest
+
+from repro.serve import CGRequestRouter, ServingEngine
+
+
+def _zipf_keys(n, seed=0, a=1.4, mod=50):
+    rng = np.random.default_rng(seed)
+    return (rng.zipf(a, n) % mod).astype(np.int32)
+
+
+def test_route_batch_b1_matches_sequential_route():
+    """route_batch with block_size=1 is bit-identical to a sequence of
+    per-message route() calls (the pure-python oracle)."""
+    keys = _zipf_keys(500)
+    r_seq = CGRequestRouter(4, alpha=8, eps=0.05)
+    r_blk = CGRequestRouter(4, alpha=8, eps=0.05, block_size=1)
+    seq = np.asarray([r_seq.route(int(k)) for k in keys])
+    blk = r_blk.route_batch(keys)
+    np.testing.assert_array_equal(seq, blk)
+    np.testing.assert_allclose(r_seq.vw_load, r_blk.vw_load)
+    assert r_seq.routed == r_blk.routed
+
+
+def test_route_batch_load_equivalence_blocked():
+    """The default (blocked) path must produce the same aggregate load
+    profile as sequential routing, up to block staleness per replica.
+
+    block_size=1 is the sequential semantics (bit-identical to route(),
+    proven above), so it stands in for the per-message oracle here."""
+    m, eps, block = 8000, 0.05, 128
+    keys = _zipf_keys(m)
+    r_seq = CGRequestRouter(4, alpha=8, eps=eps, block_size=1)
+    r_blk = CGRequestRouter(4, alpha=8, eps=eps, block_size=block)
+    seq = r_seq.route_batch(keys)
+    blk = r_blk.route_batch(keys)
+    L_seq = np.bincount(seq, minlength=4).astype(float)
+    L_blk = np.bincount(blk, minlength=4).astype(float)
+    assert L_blk.sum() == m
+    assert r_blk.vw_load.sum() == m       # one VW per message, no phantoms
+    # per-VW (1+eps) envelope, up to one block of staleness
+    assert r_blk.vw_load.max() <= (1 + eps) * m / r_blk.n_virtual + block
+    # replica-level balance matches the sequential profile
+    imb_seq = L_seq.max() / L_seq.mean() - 1.0
+    imb_blk = L_blk.max() / L_blk.mean() - 1.0
+    assert imb_blk <= imb_seq + 0.05, (imb_seq, imb_blk)
+
+
+def test_route_batch_state_carries_across_calls():
+    """Two route_batch calls == one call over the concatenated stream
+    (blocks aligned) — the PoRC state must thread through."""
+    keys = _zipf_keys(1024)
+    r1 = CGRequestRouter(4, alpha=8, eps=0.05, block_size=128)
+    r2 = CGRequestRouter(4, alpha=8, eps=0.05, block_size=128)
+    a_full = r1.route_batch(keys)
+    a_split = np.concatenate([r2.route_batch(keys[:512]),
+                              r2.route_batch(keys[512:])])
+    np.testing.assert_array_equal(a_full, a_split)
+    np.testing.assert_allclose(r1.vw_load, r2.vw_load)
+
+
+def test_route_batch_partial_block_no_padding_pollution():
+    """Odd-length batches must account exactly len(keys) messages —
+    no phantom padding keys in the load state."""
+    r = CGRequestRouter(4, alpha=8, block_size=128)
+    out = r.route_batch(_zipf_keys(301))
+    assert out.shape == (301,)
+    assert r.routed == 301
+    assert r.vw_load.sum() == 301
+
+
+def test_submit_uses_batch_path_and_matches_oracle():
+    """Engine.submit routes through route_batch; a batch of one is one
+    block of one, so it must equal the sequential oracle."""
+    keys = _zipf_keys(64)
+    oracle = CGRequestRouter(3, alpha=4)
+    eng = ServingEngine([lambda b: b] * 3, CGRequestRouter(3, alpha=4))
+    expect = [oracle.route(int(k)) for k in keys]
+    for k in keys:
+        eng.submit(int(k), payload=k)
+    depths = eng.queue_depths()
+    assert sum(depths) == len(keys)
+    expect_depths = [expect.count(i) for i in range(3)]
+    assert depths == expect_depths
+
+
+def test_rebalance_under_skew_regression():
+    """Skewed replica load must trigger delegation: virtual replicas
+    move off the overloaded replica and later waves spread out.
+
+    PoRC alone already spreads a hot *key* across virtual replicas, so
+    replica-level skew is injected adversarially: replica 0 starts out
+    owning every virtual replica (the worst assignment CG pairing must
+    recover from)."""
+    r = CGRequestRouter(3, alpha=4, eps=0.05, max_queue=16,
+                        queue_hi=0.5, queue_lo=0.25)
+    r.vw_owner[:] = 0
+    served = [0, 0, 0]
+
+    def mk(i):
+        def fn(batch):
+            served[i] += len(batch)
+        return fn
+
+    eng = ServingEngine([mk(0), mk(1), mk(2)], r, max_batch=4)
+    n_waves, wave = 12, 64
+    for w in range(n_waves):
+        eng.submit_batch(_zipf_keys(wave, seed=w), list(range(wave)))
+        eng.step()
+    total = sum(served)
+    for _ in range(400):
+        total += eng.step()
+        if total >= n_waves * wave:
+            break
+    assert total == n_waves * wave
+    assert r.moves > 0, "delegation never fired under replica skew"
+    # replica 0 must have shed virtual replicas to the idle ones
+    assert np.sum(r.vw_owner == 0) < 3 * r.alpha
+    assert served[0] < total, "rebalance never moved traffic off replica 0"
+
+
+def test_route_batch_rebases_near_f32_ceiling():
+    """Long-lived routers must rebase their f32 load counters before
+    +1.0 saturates at 2^24 (which would freeze hot VWs under the cap)."""
+    r = CGRequestRouter(4, alpha=8, block_size=128)
+    r.vw_load[:] = 2 ** 23 + np.arange(r.n_virtual, dtype=float)
+    r.routed = int(r.vw_load.sum())
+    out = r.route_batch(_zipf_keys(1000))
+    assert out.shape == (1000,)
+    assert r.vw_load.max() < 2 ** 23
+    # relative loads preserved: old spread + the new 1000 messages
+    assert abs(r.vw_load.sum() -
+               (np.arange(r.n_virtual).sum() + 1000)) < 1e-3
+
+
+def test_rebalance_preserves_vw_population():
+    r = CGRequestRouter(4, alpha=4)
+    r.route_batch(_zipf_keys(512))
+    moved = r.rebalance(busy=[0, 1], idle=[2, 3])
+    assert moved == 2
+    assert len(r.vw_owner) == 16
+    assert set(r.vw_owner) <= set(range(4))
