@@ -7,8 +7,6 @@ must (a) be bit-identical to the sequential oracle at block=1 and
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +14,7 @@ import numpy as np
 from repro.core import metrics, partitioners as P, streams
 from repro.kernels.ref import ref_porc_snapshot
 
-from .common import fmt, record, table
+from .common import fmt, record, table, time_median
 
 SCHEMES = ("KG", "PKG", "POTC", "CH", "PORC", "SG")
 
@@ -59,20 +57,6 @@ def _fig4(m: int, n_keys: int, eps: float, quick: bool):
           "≈ KG(=1.0) ≪ SG/PoTC")
 
 
-def _time(f, reps: int):
-    """Median wall time over ``reps`` runs (after a compile warmup),
-    plus the last output so callers don't rerun the workload."""
-    out = f()
-    jax.block_until_ready(out)                  # warmup: compile + run
-    ts = []
-    for _ in range(reps):
-        t0 = time.time()
-        out = f()
-        jax.block_until_ready(out)
-        ts.append(time.time() - t0)
-    return float(np.median(ts)), out
-
-
 def _block_path_gate(quick: bool):
     """Throughput + exactness gate for the block-parallel fast path."""
     n, eps = 100, 0.05
@@ -87,7 +71,7 @@ def _block_path_gate(quick: bool):
     exact = bool((a_seq == a_b1).all())
     assert exact, "block path with block=1 diverged from the oracle"
 
-    t_seq, a0 = _time(lambda: P.power_of_random_choices(keys, n, eps=eps),
+    t_seq, a0 = time_median(lambda: P.power_of_random_choices(keys, n, eps=eps),
                       reps=3)
     seq_rate = m / t_seq
     caps = jnp.ones(n) / n
@@ -100,7 +84,7 @@ def _block_path_gate(quick: bool):
              fmt(imb_seq, 4)]]
     best = 0.0
     for B in (128, 256, 512):
-        tb, (a, load) = _time(
+        tb, (a, load) = time_median(
             lambda: ref_porc_snapshot(keys, n, block=B, eps=eps), reps=10)
         imb = float(metrics.normalized_imbalance(a, caps))
         # capacity envelope up to block staleness (≤ B dupes per bin)

@@ -87,6 +87,20 @@ def scheme_stats(scheme: str, keys, n_bins: int, n_keys: int, eps: float):
     return imb, mem
 
 
+def time_median(f, reps: int = 3):
+    """Median wall time over ``reps`` runs (after a compile warmup),
+    plus the last output so callers don't rerun the workload."""
+    out = f()
+    jax.block_until_ready(out)                  # warmup: compile + run
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        out = f()
+        jax.block_until_ready(out)
+        ts.append(time.time() - t0)
+    return float(np.median(ts)), out
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.time()

@@ -31,6 +31,14 @@ Model fidelity notes
   §V-C eventual-consistency license, same as sources with local load
   views. ``block_size=0`` keeps the exact per-message oracle;
   ``block_size=1`` takes the block path and is bit-identical to it.
+* **Distributed sources** (``n_sources``/``sync_every``): §V-C's
+  multiple sources become first-class — the slot's stream splits
+  round-robin across ``n_sources`` sources, each routing against a
+  local load view (shared base + own delta) that delta-merges every
+  ``sync_every`` blocks. The slot boundary (the monitoring period t₀)
+  forces a final merge: that is when the piggybacked signals all
+  arrive, so no unpublished delta survives into the next slot.
+  ``n_sources=1`` is exactly the single-source block path.
 """
 from __future__ import annotations
 
@@ -55,6 +63,11 @@ class CGConfig(NamedTuple):
     block_size: int = 128         # PoRC messages per load snapshot;
                                   # 0 = exact per-message oracle, 1 = block
                                   # path (bit-identical to the oracle)
+    n_sources: int = 1            # §V-C distributed sources routing with
+                                  # local load views (round-robin split);
+                                  # >1 requires the block path
+    sync_every: int = 1           # blocks between delta-merge syncs of
+                                  # the sources' local views
 
 
 class CGState(NamedTuple):
@@ -101,6 +114,27 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
         vw = ((t_offset.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32)) % V)
         vw_load = vw_load.at[vw].add(1.0)
         return vw_load, vw
+
+    if cfg.n_sources > 1:
+        # §V-C distributed sources: the slot's stream splits round-robin
+        # across n_sources local load views (shared merged base + own
+        # delta, synchronized every sync_every blocks). The slot end is
+        # the monitoring boundary, where piggybacked deltas all arrive —
+        # merge them so CGState keeps a single [V] load vector.
+        if cfg.block_size < 1:
+            raise ValueError("n_sources > 1 requires the block path "
+                             "(block_size >= 1)")
+        from repro.kernels.ref import (MultiSourcePorcState,
+                                       ref_porc_multisource)
+        state = MultiSourcePorcState(
+            base=vw_load,
+            delta=jnp.zeros((cfg.n_sources, V), jnp.float32),
+            routed=t_offset,
+            ticks=jnp.zeros((), jnp.int32))
+        vw, state = ref_porc_multisource(
+            keys, V, cfg.n_sources, sync_every=cfg.sync_every,
+            block=cfg.block_size, eps=cfg.eps, state=state)
+        return state.base + state.delta.sum(0), vw
 
     if cfg.block_size >= 1:
         # Block-parallel PoRC: route the slot in blocks of B messages

@@ -49,7 +49,7 @@ def hash_to_bins(key: jnp.ndarray, salt, n_bins: int) -> jnp.ndarray:
 def hash_unit_interval(key: jnp.ndarray, salt) -> jnp.ndarray:
     """Salted hash onto the unit circle [0, 1) — consistent hashing ring."""
     h = hash_u32(key, salt)
-    return h.astype(jnp.float64 if False else jnp.float32) / jnp.float32(2**32)
+    return h.astype(jnp.float32) / jnp.float32(2**32)
 
 
 def candidate_bins(key: jnp.ndarray, d: int, n_bins: int) -> jnp.ndarray:

@@ -22,7 +22,10 @@ Each load-stateful scheme (PKG/PoTC/PoRC) also has a ``*_blocked``
 block-parallel variant routing B messages per load snapshot —
 bit-identical to the oracle at B=1, eventually consistent above (the
 staleness license of PKG / "The Power of Both Choices"). The PoRC block
-engine itself lives in ``repro.kernels`` (Pallas kernel + jnp oracle).
+engine itself lives in ``repro.kernels`` (Pallas kernel + jnp oracle),
+as does the multi-source engine behind
+``power_of_random_choices_multisource`` (§V-C: S sources with local
+load views, delta-merge synchronized).
 """
 from __future__ import annotations
 
@@ -197,6 +200,22 @@ def power_of_random_choices_blocked(keys: jnp.ndarray, n_bins: int,
     return assign
 
 
+def power_of_random_choices_multisource(keys: jnp.ndarray, n_bins: int,
+                                        n_sources: int, eps: float = 0.01,
+                                        block: int = 128,
+                                        sync_every: int = 1) -> jnp.ndarray:
+    """Multi-source PoRC (§V-C): the stream splits round-robin across
+    ``n_sources`` sources, each routing blocks against its local load
+    view (shared merged base + own unpublished delta); views synchronize
+    by delta-merge every ``sync_every`` blocks. ``n_sources=1,
+    sync_every=1`` is bit-identical to the blocked single-source path."""
+    from repro.kernels.ref import ref_porc_multisource  # deferred: core ← kernels
+    assign, _ = ref_porc_multisource(keys, n_bins, n_sources,
+                                     sync_every=sync_every, block=block,
+                                     eps=eps)
+    return assign
+
+
 # ---------------------------------------------------------------------------
 # CH — consistent hashing with bounded loads (Mirrokni et al.)
 # ---------------------------------------------------------------------------
@@ -257,7 +276,8 @@ def consistent_hashing_bounded(keys: jnp.ndarray, n_bins: int,
 # ---------------------------------------------------------------------------
 
 def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
-          eps: float = 0.01, block_size: int | None = None) -> jnp.ndarray:
+          eps: float = 0.01, block_size: int | None = None,
+          sources: int = 1, sync_every: int = 1) -> jnp.ndarray:
     """Route a full stream with the named scheme (paper Table II symbols).
 
     ``block_size=None`` uses the exact sequential oracles (one message
@@ -266,8 +286,17 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
     bit-identical at block_size=1, eventually consistent above. KG/SG
     are stateless (already fully parallel); CH walks a ring sequentially
     and has no blocked variant, so both ignore ``block_size``.
+
+    ``sources > 1`` models the paper's §V-C distributed sources for
+    PoRC: the stream splits round-robin across that many sources, each
+    with a local load view synchronized every ``sync_every`` blocks
+    (requires the block path; KG/SG are source-oblivious and the other
+    load-stateful schemes have no multi-source variant — they reject
+    ``sources > 1``).
     """
     scheme = scheme.upper()
+    if sources > 1 and scheme not in ("PORC", "KG", "SG"):
+        raise ValueError(f"scheme {scheme!r} has no multi-source variant")
     if scheme == "KG":
         return key_grouping(keys, n_bins)
     if scheme == "SG":
@@ -281,6 +310,10 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
             return power_of_two_choices_blocked(keys, n_bins, block=block_size)
         return power_of_two_choices(keys, n_bins)
     if scheme == "PORC":
+        if sources > 1:
+            return power_of_random_choices_multisource(
+                keys, n_bins, sources, eps=eps, block=block_size or 128,
+                sync_every=sync_every)
         if block_size:
             return power_of_random_choices_blocked(keys, n_bins, eps=eps,
                                                    block=block_size)

@@ -138,6 +138,52 @@ def block_spans(m: int, block: int) -> list[tuple[int, int, int]]:
     return spans
 
 
+def _snapshot_resolve(load, cap, cand, salts, assign, max_probes):
+    ok = (load[cand] < cap) & (salts <= max_probes)[None, :]
+    first = jnp.argmax(ok, axis=1)
+    pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+    hit = (assign < 0) & jnp.any(ok, axis=1)
+    return jnp.where(hit, pick, assign)
+
+
+def _snapshot_block(load, cap, kblk, cand0, n_bins: int, block: int,
+                    chunk: int):
+    """Route one block of keys against a frozen load snapshot.
+
+    The single routing semantics shared by ``ref_porc_snapshot`` (one
+    source, snapshot = running load) and ``ref_porc_multisource`` (one
+    snapshot per source = merged base + own delta): each key walks its
+    salted-probe chain against ``load`` and stops at the first bin below
+    ``cap``. At block=1 the full 4·n_bins chain of Alg. 1 runs (lazily,
+    in chunks of ``chunk`` salts); at block>1 the budget is the ``chunk``
+    pre-hashed candidates in ``cand0``. Exhausting the budget falls back
+    to the least-loaded snapshot bin (Alg. 1's fallback).
+    """
+    max_probes = 4 * n_bins
+    salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
+    assign = _snapshot_resolve(load, cap, cand0, salts0,
+                               jnp.full((block,), -1, jnp.int32), max_probes)
+
+    if block == 1:
+        # exactness: continue the salted chain to the oracle ceiling
+        def cond(c):
+            salt0, assign = c
+            return (salt0 <= max_probes) & jnp.any(assign < 0)
+
+        def probe_chunk(c):
+            salt0, assign = c
+            salts = salt0 + jnp.arange(chunk, dtype=jnp.uint32)
+            cand = hash_to_bins(kblk[:, None], salts[None, :], n_bins)
+            return salt0 + chunk, _snapshot_resolve(load, cap, cand, salts,
+                                                    assign, max_probes)
+
+        _, assign = jax.lax.while_loop(
+            cond, probe_chunk, (jnp.uint32(1 + chunk), assign))
+
+    # probe budget exhausted: least-loaded snapshot bin (Alg. 1)
+    return jnp.where(assign < 0, jnp.argmin(load).astype(jnp.int32), assign)
+
+
 @functools.partial(jax.jit, static_argnames=("n_bins", "block", "eps", "chunk"))
 def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
                       eps: float = 0.05, chunk: int = 8,
@@ -174,44 +220,16 @@ def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     assert M % block == 0, f"{M} % {block} != 0"
     nb = M // block
     kb = keys.reshape(nb, block)
-    max_probes = 4 * n_bins
     load = jnp.zeros(n_bins, jnp.float32) if load0 is None else load0
     # the first chunk of candidates is load-independent → hoist the
     # hashing for the whole stream out of the per-block scan
     salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
     cand0 = hash_to_bins(kb[:, :, None], salts0[None, None, :], n_bins)
 
-    def resolve(load, cap, cand, salts, assign):
-        ok = (load[cand] < cap) & (salts <= max_probes)[None, :]
-        first = jnp.argmax(ok, axis=1)
-        pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
-        hit = (assign < 0) & jnp.any(ok, axis=1)
-        return jnp.where(hit, pick, assign)
-
     def blk(load, xs):
         b, kblk, cblk = xs
         cap = (1.0 + eps) * (m0 + (b + 1.0) * block) / n_bins
-        assign = resolve(load, cap, cblk, salts0,
-                         jnp.full((block,), -1, jnp.int32))
-
-        if block == 1:
-            # exactness: continue the salted chain to the oracle ceiling
-            def cond(c):
-                salt0, assign = c
-                return (salt0 <= max_probes) & jnp.any(assign < 0)
-
-            def probe_chunk(c):
-                salt0, assign = c
-                salts = salt0 + jnp.arange(chunk, dtype=jnp.uint32)
-                cand = hash_to_bins(kblk[:, None], salts[None, :], n_bins)
-                return salt0 + chunk, resolve(load, cap, cand, salts, assign)
-
-            _, assign = jax.lax.while_loop(
-                cond, probe_chunk, (jnp.uint32(1 + chunk), assign))
-
-        # probe budget exhausted: least-loaded snapshot bin (Alg. 1)
-        assign = jnp.where(assign < 0, jnp.argmin(load).astype(jnp.int32),
-                           assign)
+        assign = _snapshot_block(load, cap, kblk, cblk, n_bins, block, chunk)
         return load.at[assign].add(1.0), assign
 
     load, assign = jax.lax.scan(blk, load,
@@ -266,6 +284,220 @@ def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     assign, (load, routed) = route_in_spans(
         keys, block, (state.load, state.routed), step)
     return assign, PorcState(load=load, routed=routed)
+
+
+# ---------------------------------------------------------------------------
+# Multi-source PoRC — §V-C distributed sources with local load views
+# ---------------------------------------------------------------------------
+
+class MultiSourcePorcState(NamedTuple):
+    """Routing state of S sources sharing one bin population (§V-C).
+
+    Each source routes against its *local* load view ``base + delta[s]``:
+    the last synchronized global load plus its own unpublished counts.
+    ``delta`` is merged into ``base`` every ``sync_every`` blocks — the
+    paper's piggybacked load synchronization — so a source's view is
+    stale by at most one sync period of the other sources' traffic.
+    ``ticks`` carries the sync phase (blocks routed since the last
+    merge) across calls, so a stream fed in batches shorter than one
+    sync period still merges on schedule instead of never.
+    """
+    base: jnp.ndarray     # [n_bins]    f32 merged (synchronized) load
+    delta: jnp.ndarray    # [S, n_bins] f32 per-source unpublished counts
+    routed: jnp.ndarray   # []          f32 global message clock m_t
+    ticks: jnp.ndarray    # []          i32 blocks since the last merge
+
+
+def multisource_state_init(n_bins: int, n_sources: int) -> MultiSourcePorcState:
+    return MultiSourcePorcState(
+        base=jnp.zeros(n_bins, jnp.float32),
+        delta=jnp.zeros((n_sources, n_bins), jnp.float32),
+        routed=jnp.zeros((), jnp.float32),
+        ticks=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bins", "n_sources", "sync_every", "block", "eps", "chunk", "engine"))
+def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
+                           sync_every: int, block: int, eps: float,
+                           chunk: int, engine: str, base0, delta0, ticks0):
+    """Core multi-source scan over full per-source blocks.
+
+    ``keys`` is the round-robin-interleaved global stream (message i
+    belongs to source i % S); its length must be a multiple of S·block.
+    Per scan step every source routes one block of its substream against
+    ``base + delta[s]`` (``_snapshot_block`` or the rank-sequential
+    ``_porc_block``, vmapped over sources); every ``sync_every`` steps
+    the deltas merge into the base.
+    """
+    S = n_sources
+    M = keys.shape[0]
+    assert M % (S * block) == 0, f"{M} % {S}*{block} != 0"
+    nb = M // (S * block)
+    # [nb, S, block]: element [b, s, k] = keys[(b·block + k)·S + s],
+    # source s's k-th message of its b-th block
+    kb = keys.reshape(nb, block, S).transpose(0, 2, 1)
+    if engine == "snapshot":
+        salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
+        cand0 = hash_to_bins(kb[..., None], salts0, n_bins)  # [nb,S,block,chunk]
+        xs_extra = (cand0,)
+        route_block = jax.vmap(
+            lambda view, cap, kblk, cblk: _snapshot_block(
+                view, cap, kblk, cblk, n_bins, block, chunk),
+            in_axes=(0, 0, 0, 0))
+    else:        # "strict": in-block contention resolved rank by rank
+        xs_extra = ()
+        route_block = jax.vmap(
+            lambda view, cap, kblk: _porc_block(
+                view, kblk, cap, n_bins, 4 * n_bins)[1],
+            in_axes=(0, 0, 0))
+
+    def blk(carry, xs):
+        base, delta = carry
+        b, kblk, *extra = xs
+        # Per-source capacity from the mass of its *local view* (merged
+        # base + own delta) — not the global clock. A cap the source
+        # cannot verify against its view would let all S sources fill a
+        # hot bin to the global cap independently (S× overshoot at cold
+        # start); the local-mass cap keeps the strict per-source
+        # invariant load_view ≤ (1+eps)·mass_view/n, whose sum
+        # telescopes to the global (1+eps)·m/n envelope — exactly why
+        # the paper's independent-sources argument works. The arriving
+        # block enters the mass as block/S so the *aggregate* lookahead
+        # across sources is one block, matching the single-source m_t
+        # (at S=1 this reduces bit-exactly to ``ref_porc_snapshot``'s
+        # capacity); a full +block per source would hand the S sources
+        # S·(1+eps)·block/n of joint slack on a shared hot bin.
+        cap = (1.0 + eps) * (base.sum() + delta.sum(1) + block / S) / n_bins
+        views = base[None, :] + delta                     # [S, n_bins]
+        assign = route_block(views, cap, kblk, *extra)    # [S, block]
+        delta = jax.vmap(lambda d, a: d.at[a].add(1.0))(delta, assign)
+        # piggyback merge — phase continues from ticks0 across calls
+        sync = ((ticks0 + b + 1) % sync_every) == 0
+        base = jnp.where(sync, base + delta.sum(0), base)
+        delta = jnp.where(sync, jnp.zeros_like(delta), delta)
+        return (base, delta), assign
+
+    (base, delta), assign = jax.lax.scan(
+        blk, (base0, delta0),
+        (jnp.arange(nb, dtype=jnp.int32), kb, *xs_extra))
+    # invert the round-robin interleave back to global message order
+    return (assign.transpose(0, 2, 1).reshape(-1), base, delta,
+            (ticks0 + nb) % sync_every)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "n_sources", "eps",
+                                             "chunk"))
+def _porc_multisource_tail(keys_pad: jnp.ndarray, n_bins: int, n_sources: int,
+                           eps: float, chunk: int, base0, delta0, n_tail):
+    """Ragged tail: the final r < S messages, one to each of sources
+    0..r-1. ``keys_pad`` is padded to [S]; sources ≥ ``n_tail`` route a
+    phantom key whose assignment is discarded and whose delta update is
+    masked out, so one compiled program covers every r. The residue
+    publishes immediately (merged base, zero deltas): it is less than
+    one block, so it cannot advance the block-granular sync phase, and
+    leaving it unpublished would let a stream fed in sub-S batches
+    accumulate lane deltas that never merge — breaking the documented
+    one-sync-period staleness bound.
+    """
+    S = n_sources
+    active = (jnp.arange(S) < n_tail)
+    cand0 = hash_to_bins(keys_pad[:, None, None],
+                         jnp.arange(1, chunk + 1, dtype=jnp.uint32), n_bins)
+    cap = (1.0 + eps) * (base0.sum() + delta0.sum(1) + 1.0 / S) / n_bins
+    assign = jax.vmap(
+        lambda view, kblk, cblk, c: _snapshot_block(
+            view, c, kblk, cblk, n_bins, 1, chunk))(
+        base0[None, :] + delta0, keys_pad[:, None], cand0, cap)[:, 0]
+    delta = jax.vmap(lambda d, a, m: d.at[a].add(m))(
+        delta0, assign, active.astype(jnp.float32))
+    return assign, base0 + delta.sum(0), jnp.zeros_like(delta)
+
+
+def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
+                         sync_every: int = 1, block: int = 128,
+                         eps: float = 0.05, chunk: int = 8,
+                         state: MultiSourcePorcState | None = None,
+                         engine: str = "snapshot"):
+    """Multi-source block-parallel PoRC (§V-C distributed sources).
+
+    The stream splits round-robin across ``n_sources`` sources (message
+    i → source i % S, the paper's SG assignment of messages to sources);
+    each source routes blocks of ``block`` messages against its local
+    view ``base + own delta`` and the deltas merge into the shared base
+    every ``sync_every`` blocks (piggybacked synchronization). Staleness
+    is therefore bounded by one sync period: a source never misses more
+    than the other S−1 sources' ``sync_every·block`` most recent
+    messages.
+
+    ``engine`` picks the per-block router, same choice as
+    ``ref_porc_route``: ``"snapshot"`` (the fast path — each block
+    probes a frozen local view) or ``"strict"`` (rank-sequential
+    ``_porc_block`` — in-block contention resolved against the cap,
+    slower but exact inside a block; use it when per-bin loads are a
+    handful of messages, e.g. Fig 11's 100-source / 1000-VW point,
+    where one block of snapshot staleness would dominate the ε
+    mechanism).
+
+    With ``n_sources=1, sync_every=1`` the local view *is* the running
+    load, so the result is bit-identical to ``ref_porc_route`` with the
+    same engine (and at ``block=1`` to the sequential oracle). Arbitrary
+    stream lengths are handled like ``ref_porc_route``: the per-source
+    remainder routes as power-of-two sub-blocks (``block_spans``), and a
+    final sub-S ragged tail routes one message per source with the
+    others masked (and publishes immediately — see
+    ``_porc_multisource_tail``). The sync phase carries across spans and
+    calls via ``state.ticks`` (block-granular, so a stream fed in short
+    batches still merges every ``sync_every`` blocks); block boundaries
+    themselves realign per call, the same alignment caveat as
+    ``ref_porc_route``.
+
+    Returns (assignment [M] int32 in original stream order,
+    new MultiSourcePorcState).
+    """
+    S = n_sources
+    if engine not in ("snapshot", "strict"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if state is None:
+        state = multisource_state_init(n_bins, S)
+    base, delta, routed, ticks = state
+    per = keys.shape[0] // S             # full per-source span length
+    r = keys.shape[0] - per * S
+    parts = []
+    off = 0
+    for _, length, blk in block_spans(per, block):
+        span = keys[off: off + length * S]
+        a, base, delta, ticks = _porc_multisource_scan(
+            span, n_bins, S, sync_every, blk, eps, chunk, engine,
+            base, delta, ticks)
+        routed = routed + length * S
+        parts.append(a)
+        off += length * S
+    if r:
+        keys_pad = jnp.concatenate(
+            [keys[off:], jnp.zeros((S - r,), keys.dtype)])
+        a, base, delta = _porc_multisource_tail(
+            keys_pad, n_bins, S, eps, chunk, base, delta, jnp.float32(r))
+        routed = routed + r
+        ticks = jnp.zeros_like(ticks)    # tail publish = a merge
+        parts.append(a[:r])
+    if not parts:
+        assign = jnp.zeros((0,), jnp.int32)
+    else:
+        assign = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return assign, MultiSourcePorcState(base=base, delta=delta,
+                                        routed=routed, ticks=ticks)
+
+
+def multisource_merge(state: MultiSourcePorcState) -> MultiSourcePorcState:
+    """Force a synchronization: publish every source's delta into the
+    base (e.g. at a monitoring-slot boundary, where the paper's
+    piggybacked signals all arrive) and restart the sync phase."""
+    return MultiSourcePorcState(
+        base=state.base + state.delta.sum(0),
+        delta=jnp.zeros_like(state.delta),
+        routed=state.routed,
+        ticks=jnp.zeros_like(state.ticks))
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.hashing import hash_to_bins
+from repro.kernels.ref import (multisource_merge, multisource_state_init,
+                               ref_porc_multisource)
 import jax.numpy as jnp
 
 
@@ -33,7 +35,17 @@ class ReplicaState:
 
 @dataclass
 class CGRequestRouter:
-    """PoRC + virtual-replica assignment for incoming request keys."""
+    """PoRC + virtual-replica assignment for incoming request keys.
+
+    Routing state lives on device as a ``MultiSourcePorcState`` and
+    stays there across ``route_batch`` calls — the host only mirrors the
+    integer message count, so the steady-state submit path never
+    round-trips the load vectors through NumPy. ``n_sources > 1`` shards
+    each batch round-robin across that many source lanes (§V-C: each
+    lane routes against its local view, delta-merged every
+    ``sync_every`` blocks); ``n_sources=1`` is the single-source block
+    path, bit-identical to the previous engine.
+    """
     n_replicas: int
     alpha: int = 8
     eps: float = 0.05
@@ -42,66 +54,118 @@ class CGRequestRouter:
     max_queue: int = 256
     block_size: int = 128         # PoRC messages per load snapshot;
                                   # 1 = exact per-message Alg. 1
+    n_sources: int = 1            # source lanes a batch is sharded over
+    sync_every: int = 1           # blocks between lane delta-merges
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
         self.vw_owner = np.repeat(np.arange(self.n_replicas), self.alpha)
-        self.vw_load = np.zeros(self.n_virtual)
-        self.routed = 0
+        self._state = multisource_state_init(self.n_virtual, self.n_sources)
+        self._routed = 0
         self.moves = 0
+
+    @property
+    def vw_load(self) -> np.ndarray:
+        """Merged per-VW load (base + unpublished lane deltas), as a
+        fresh NumPy array — a device download, for monitoring/rebalance.
+        Assigning to it reseeds the base load and clears the deltas."""
+        s = self._state
+        return np.asarray(s.base + s.delta.sum(0))
+
+    @vw_load.setter
+    def vw_load(self, value) -> None:
+        value = np.asarray(value, np.float32)
+        self._state = self._state._replace(
+            base=jnp.asarray(value),
+            delta=jnp.zeros_like(self._state.delta))
+        # conservation invariant: routed == total load. Re-deriving it
+        # here keeps the host-side rebase trigger sound after a state
+        # restore that only seeds the loads; assign ``routed`` after
+        # this to override the clock explicitly.
+        self.routed = int(value.sum())
+
+    @property
+    def routed(self) -> int:
+        return self._routed
+
+    @routed.setter
+    def routed(self, value) -> None:
+        self._routed = int(value)
+        self._state = self._state._replace(routed=jnp.float32(self._routed))
+
+    def _maybe_rebase(self) -> None:
+        # The engine carries load/routed as f32: past 2^24 a +1.0 becomes
+        # a silent no-op and balancing would collapse onto "frozen" VWs.
+        # Rebase by the min load first (shifts the capacity check by only
+        # eps·base, and keeps every counter far from the f32 ceiling).
+        # The trigger is the (1+eps)·m/n envelope plus the staleness
+        # bound — a host-side bound on the true max load, so the hot
+        # path never waits on a device readback.
+        stale = max(self.block_size, 1) * self.n_sources * self.sync_every
+        if (1.0 + self.eps) * self._routed / self.n_virtual + stale < 2 ** 23:
+            return
+        shift = float(jnp.min(self._state.base + self._state.delta.sum(0)))
+        self._routed -= int(shift * self.n_virtual)
+        self._state = self._state._replace(
+            base=self._state.base - shift,
+            routed=jnp.float32(self._routed))
 
     def route(self, key: int) -> int:
         """PoRC over virtual replicas (Alg. 1), then owner lookup.
 
         Pure-python sequential oracle — ``route_batch`` with
         ``block_size=1`` is bit-identical to a sequence of these calls.
+        Lane deltas are flushed first (a forced sync), so the probe
+        chain sees the true global load.
         """
-        self.routed += 1
-        cap = (1.0 + self.eps) * self.routed / self.n_virtual
+        self._maybe_rebase()
+        if self.n_sources > 1 or self.sync_every > 1:
+            state = multisource_merge(self._state)    # flush lane deltas
+        else:
+            state = self._state                       # deltas provably empty
+        load = np.array(state.base)                   # writable host copy
+        self._routed += 1
+        cap = (1.0 + self.eps) * self._routed / self.n_virtual
         salt = 1
         vw = int(hash_to_bins(jnp.int32(key), salt, self.n_virtual))
-        while self.vw_load[vw] >= cap and salt < 4 * self.n_virtual:
+        while load[vw] >= cap and salt < 4 * self.n_virtual:
             salt += 1
             vw = int(hash_to_bins(jnp.int32(key), salt, self.n_virtual))
-        if self.vw_load[vw] >= cap:
-            vw = int(np.argmin(self.vw_load))
-        self.vw_load[vw] += 1
+        if load[vw] >= cap:
+            vw = int(np.argmin(load))
+        load[vw] += 1
+        self._state = state._replace(
+            base=jnp.asarray(load, jnp.float32),
+            routed=jnp.float32(self._routed))
         return int(self.vw_owner[vw])
 
     def route_batch(self, keys: np.ndarray) -> np.ndarray:
-        """Block-parallel PoRC over virtual replicas (the default submit
-        path). Load state carries across calls; a trailing partial block
+        """Sharded block-parallel PoRC over virtual replicas (the
+        default submit path). The batch splits round-robin across
+        ``n_sources`` lanes routed concurrently (vmapped); load state
+        stays device-resident across calls. A trailing partial block
         routes as power-of-two sub-blocks, so no padding keys ever
         pollute the load state and arbitrary batch sizes compile only
         O(log block_size) remainder programs."""
-        from repro.kernels.ref import PorcState, ref_porc_route
         keys = np.asarray(keys, np.int32)
-        # The engine carries load/routed as f32: past 2^24 a +1.0 becomes
-        # a silent no-op and balancing would collapse onto "frozen" VWs.
-        # Rebase by the min load first (shifts the capacity check by only
-        # eps·base, and keeps every counter far from the f32 ceiling).
-        if self.vw_load.max() >= 2 ** 23:
-            base = float(self.vw_load.min())
-            self.vw_load = self.vw_load - base
-            self.routed -= int(base * self.n_virtual)
-        state = PorcState(load=jnp.asarray(self.vw_load, jnp.float32),
-                          routed=jnp.float32(self.routed))
-        assign_vw, state = ref_porc_route(
-            jnp.asarray(keys), self.n_virtual,
-            block=self.block_size, eps=self.eps, state=state)
-        self.vw_load = np.array(state.load)   # writable copy
-        self.routed += len(keys)
+        self._maybe_rebase()
+        assign_vw, self._state = ref_porc_multisource(
+            jnp.asarray(keys), self.n_virtual, self.n_sources,
+            sync_every=self.sync_every, block=self.block_size,
+            eps=self.eps, state=self._state)
+        self._routed += len(keys)
         return self.vw_owner[np.asarray(assign_vw)]
 
     def rebalance(self, busy: list[int], idle: list[int]) -> int:
         """Paired moves: one virtual replica per (busy, idle) pair."""
         moved = 0
+        loads = self.vw_load                  # one device download
         for b, i in zip(busy, idle):
             owned = np.flatnonzero(self.vw_owner == b)
             if len(owned) == 0:
                 continue
             # move the most-loaded virtual replica (greatest relief)
-            vw = owned[np.argmax(self.vw_load[owned])]
+            vw = owned[np.argmax(loads[owned])]
             self.vw_owner[vw] = i
             moved += 1
         self.moves += moved

@@ -134,3 +134,55 @@ def test_block_path_converges_like_oracle(keys):
     late = float(np.mean(np.asarray(res.imbalance)[-3:]))
     assert late < early
     assert int(res.moves) > 0
+
+
+# ---------------------------------------------------------------------------
+# distributed sources (CGConfig.n_sources / sync_every)
+# ---------------------------------------------------------------------------
+
+def test_multisource_s1_bit_identical_to_single(keys):
+    """n_sources=1 must keep the single-source block path bit-for-bit
+    (it routes through the same code path, not the multisource one)."""
+    sub = keys[:30_000]
+    caps = _caps(10, 3, 5.0)
+    cfg1 = cg.CGConfig(n_workers=10, slot_len=10_000, block_size=128)
+    cfgS = cg.CGConfig(n_workers=10, slot_len=10_000, block_size=128,
+                       n_sources=1, sync_every=4)
+    r1, rS = cg.run(cfg1, sub, caps), cg.run(cfgS, sub, caps)
+    np.testing.assert_array_equal(np.asarray(r1.vw_assignment),
+                                  np.asarray(rS.vw_assignment))
+
+
+@pytest.mark.parametrize("n_sources", [10, 100])
+def test_multisource_divergence_bounded(keys, n_sources):
+    """With S sources the VW loads stay inside the (1+eps) envelope up
+    to one sync window of staleness — the Fig 11 flatness claim inside
+    the full CG simulation."""
+    eps, block, sync_every = 0.05, 8, 2
+    cfg = cg.CGConfig(n_workers=10, alpha=10, eps=eps, slot_len=10_000,
+                      block_size=block, n_sources=n_sources,
+                      sync_every=sync_every)
+    res = cg.run(cfg, keys, _caps(10, 1, 1.0))
+    vw_load = np.asarray(res.state.vw_load)
+    V = cfg.n_workers * cfg.alpha
+    window = n_sources * sync_every * block
+    assert vw_load.max() <= (1 + eps) * len(keys) / V + window + 1
+    assert vw_load.sum() == len(keys)            # every message placed
+
+
+def test_multisource_converges_on_heterogeneous(keys):
+    """Delegation still converges when routing is sharded over sources."""
+    cfg = cg.CGConfig(n_workers=10, alpha=10, eps=0.01, slot_len=10_000,
+                      block_size=16, n_sources=10)
+    res = cg.run(cfg, keys, _caps(10, 3, 5.0))
+    early = float(np.mean(np.asarray(res.imbalance)[:3]))
+    late = float(np.mean(np.asarray(res.imbalance)[-3:]))
+    assert late < early
+    assert int(res.moves) > 0
+
+
+def test_multisource_requires_block_path(keys):
+    cfg = cg.CGConfig(n_workers=4, slot_len=10_000, block_size=0,
+                      n_sources=4)
+    with pytest.raises(ValueError):
+        cg.run(cfg, keys[:10_000], _caps(4, 1, 1.0))

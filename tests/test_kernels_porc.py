@@ -107,6 +107,142 @@ def test_porc_route_state_threading():
     assert float(s_full.load.sum()) == 1000.0
 
 
+# ---------------------------------------------------------------------------
+# multi-source engine (ref_porc_multisource)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [1, 64, 128])
+@pytest.mark.parametrize("engine", ["snapshot", "strict"])
+def test_multisource_s1_bit_identical_to_route(block, engine):
+    """S=1, sync_every=1 must reproduce ref_porc_route bit-for-bit with
+    either per-block engine (incl. a non-block-multiple tail)."""
+    from repro.kernels.ref import ref_porc_multisource, ref_porc_route
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(9), 1777, 400, 1.3)
+    a_ref, s_ref = ref_porc_route(keys, 24, block=block, eps=0.05,
+                                  engine=engine)
+    a_ms, s_ms = ref_porc_multisource(keys, 24, 1, sync_every=1, block=block,
+                                      eps=0.05, engine=engine)
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_ms))
+    np.testing.assert_allclose(np.asarray(s_ref.load),
+                               np.asarray(s_ms.base + s_ms.delta.sum(0)))
+    assert float(s_ref.routed) == float(s_ms.routed)
+
+
+@pytest.mark.parametrize("n_sources", [3, 10, 100])
+@pytest.mark.parametrize("m", [4096, 3001])
+def test_multisource_conservation(n_sources, m):
+    """Every message lands in exactly one bin and every source's count
+    is accounted: base + Σ deltas == assignment histogram == m (holds
+    through syncs, partial blocks, and the ragged sub-S tail)."""
+    from repro.kernels.ref import ref_porc_multisource
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(10), m, 900, 1.2)
+    a, st = ref_porc_multisource(keys, 50, n_sources, sync_every=2,
+                                 block=64, eps=0.05)
+    a = np.asarray(a)
+    assert a.shape == (m,) and a.min() >= 0 and a.max() < 50
+    total = np.asarray(st.base + st.delta.sum(0))
+    np.testing.assert_allclose(total, np.bincount(a, minlength=50))
+    assert float(st.routed) == m
+    assert float(total.sum()) == m
+
+
+def test_multisource_state_carries_across_calls():
+    """Two calls with the carried state == one call over the
+    concatenation (spans and sync boundaries aligned)."""
+    from repro.kernels.ref import ref_porc_multisource
+    S, block = 4, 64
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(11), 2048, 500, 1.2)
+    a_full, s_full = ref_porc_multisource(keys, 32, S, sync_every=2,
+                                          block=block)
+    a1, s1 = ref_porc_multisource(keys[:1024], 32, S, sync_every=2,
+                                  block=block)
+    a2, s2 = ref_porc_multisource(keys[1024:], 32, S, sync_every=2,
+                                  block=block, state=s1)
+    np.testing.assert_array_equal(np.asarray(a_full),
+                                  np.concatenate([a1, a2]))
+    np.testing.assert_allclose(np.asarray(s_full.base), np.asarray(s2.base))
+    np.testing.assert_allclose(np.asarray(s_full.delta), np.asarray(s2.delta))
+    assert float(s_full.routed) == float(s2.routed) == 2048.0
+
+
+@pytest.mark.parametrize("n_sources", [1, 10, 50, 100])
+def test_multisource_imbalance_within_staleness_envelope(n_sources):
+    """The Fig 11 claim: as S grows 1→100 the max load stays inside the
+    (1+eps) envelope up to one sync window of staleness (the other
+    sources' unseen S·sync_every·block messages + the cap lookahead)."""
+    from repro.kernels.ref import ref_porc_multisource
+    n, m, eps, block, sync_every = 20, 20_000, 0.05, 4, 2
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(12), m, 2000, 1.2)
+    a, st = ref_porc_multisource(keys, n, n_sources, sync_every=sync_every,
+                                 block=block, eps=eps)
+    load = np.asarray(st.base + st.delta.sum(0))
+    window = n_sources * sync_every * block
+    assert load.max() <= (1 + eps) * m / n + window + 1
+    assert load.sum() == m
+
+
+@pytest.mark.parametrize("n_sources", [5, 32])
+def test_multisource_strict_engine_conserves_and_bounds(n_sources):
+    """The vmapped rank-sequential engine at S>1: conservation plus the
+    strict in-block cap (overshoot bounded by the cross-source sync
+    window alone, with no in-block staleness term)."""
+    from repro.kernels.ref import ref_porc_multisource
+    n, m, eps, block, sync_every = 20, 16_000, 0.05, 8, 2
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(15), m, 1500, 1.3)
+    a, st = ref_porc_multisource(keys, n, n_sources, sync_every=sync_every,
+                                 block=block, eps=eps, engine="strict")
+    a = np.asarray(a)
+    load = np.asarray(st.base + st.delta.sum(0))
+    np.testing.assert_allclose(load, np.bincount(a, minlength=n))
+    assert float(st.routed) == m
+    window = n_sources * sync_every * block
+    assert load.max() <= (1 + eps) * m / n + window + 1
+
+
+def test_multisource_sync_phase_carries_across_calls():
+    """The sync counter must not restart per call: feeding one block at
+    a time with sync_every=4 still merges every 4th block, bit-equal to
+    the one-shot stream (and the deltas do eventually publish)."""
+    from repro.kernels.ref import ref_porc_multisource
+    S, block, sync_every = 4, 16, 4
+    step = S * block                      # one scan step per call
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(14),
+                                      8 * step, 300, 1.2)
+    a_full, s_full = ref_porc_multisource(keys, 16, S,
+                                          sync_every=sync_every, block=block)
+    st, parts = None, []
+    for i in range(8):
+        a, st = ref_porc_multisource(keys[i * step:(i + 1) * step], 16, S,
+                                     sync_every=sync_every, block=block,
+                                     state=st)
+        parts.append(a)
+    np.testing.assert_array_equal(np.asarray(a_full), np.concatenate(parts))
+    np.testing.assert_allclose(np.asarray(s_full.base), np.asarray(st.base))
+    np.testing.assert_allclose(np.asarray(s_full.delta), np.asarray(st.delta))
+    assert int(st.ticks) == 0             # 8 blocks = 2 full sync periods
+    assert float(np.asarray(st.delta).sum()) == 0.0   # deltas published
+
+
+def test_multisource_empty_stream():
+    from repro.kernels.ref import ref_porc_multisource
+    a, st = ref_porc_multisource(jnp.zeros((0,), jnp.int32), 8, 4)
+    assert a.shape == (0,)
+    assert float(st.routed) == 0.0
+
+
+def test_multisource_tail_only_call():
+    """A call shorter than S routes the ragged tail path alone: one
+    message per source, the rest masked — no phantom load."""
+    from repro.kernels.ref import ref_porc_multisource
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(13), 5, 50, 1.2)
+    a, st = ref_porc_multisource(keys, 8, 16, block=64, eps=0.05)
+    a = np.asarray(a)
+    assert a.shape == (5,) and a.min() >= 0 and a.max() < 8
+    total = np.asarray(st.base + st.delta.sum(0))
+    np.testing.assert_allclose(total, np.bincount(a, minlength=8))
+    assert float(st.routed) == 5.0
+
+
 def test_load_equals_histogram():
     n = 16
     keys = streams.sample_zipf_stream(jax.random.PRNGKey(4), 1024, 200, 1.0)

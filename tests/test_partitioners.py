@@ -140,3 +140,44 @@ def test_blocked_pkg_two_bins_per_key(zipf_keys):
     keys = np.asarray(zipf_keys)
     for k in np.unique(keys[:200]):
         assert len(np.unique(a[keys == k])) <= 2
+
+
+# ---------------------------------------------------------------------------
+# multi-source variants (§V-C distributed sources)
+# ---------------------------------------------------------------------------
+
+def test_multisource_s1_matches_blocked(zipf_keys):
+    """route(sources=1) is bit-identical to the blocked single-source
+    path — the multisource engine at S=1 is the same semantics."""
+    sub = zipf_keys[:5000]
+    a_blk = np.asarray(P.route("PORC", sub, 16, eps=0.05, block_size=128))
+    a_ms = np.asarray(P.route("PORC", sub, 16, eps=0.05, block_size=128,
+                              sources=1))
+    np.testing.assert_array_equal(a_blk, a_ms)
+
+
+@pytest.mark.parametrize("sources", [10, 100])
+def test_multisource_route_in_range_any_length(zipf_keys, sources):
+    """Multi-source routing accepts lengths not divisible by S·block."""
+    sub = zipf_keys[: 2 * 128 * sources // 3 + 7]
+    a = np.asarray(P.route("PORC", sub, 16, block_size=128, sources=sources,
+                           sync_every=2))
+    assert a.shape == (len(sub),)
+    assert a.min() >= 0 and a.max() < 16
+
+
+def test_multisource_porc_envelope(zipf_keys):
+    """Total per-bin load stays inside the (1+eps) envelope up to one
+    sync window of staleness, even at 50 sources."""
+    n, eps, block, sources, sync_every = 20, 0.05, 8, 50, 1
+    a = P.power_of_random_choices_multisource(
+        zipf_keys, n, sources, eps=eps, block=block, sync_every=sync_every)
+    L = np.asarray(metrics.loads(a, n))
+    assert L.max() <= (1 + eps) * M / n + sources * sync_every * block + 1
+    assert L.sum() == M
+
+
+def test_multisource_rejects_stateful_non_porc(zipf_keys):
+    for scheme in ("PKG", "POTC", "CH"):
+        with pytest.raises(ValueError):
+            P.route(scheme, zipf_keys[:256], 8, sources=4)

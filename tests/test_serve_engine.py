@@ -125,7 +125,7 @@ def test_route_batch_rebases_near_f32_ceiling():
     """Long-lived routers must rebase their f32 load counters before
     +1.0 saturates at 2^24 (which would freeze hot VWs under the cap)."""
     r = CGRequestRouter(4, alpha=8, block_size=128)
-    r.vw_load[:] = 2 ** 23 + np.arange(r.n_virtual, dtype=float)
+    r.vw_load = 2 ** 23 + np.arange(r.n_virtual, dtype=float)
     r.routed = int(r.vw_load.sum())
     out = r.route_batch(_zipf_keys(1000))
     assert out.shape == (1000,)
@@ -133,6 +133,63 @@ def test_route_batch_rebases_near_f32_ceiling():
     # relative loads preserved: old spread + the new 1000 messages
     assert abs(r.vw_load.sum() -
                (np.arange(r.n_virtual).sum() + 1000)) < 1e-3
+
+
+def test_route_rebases_near_f32_ceiling():
+    """The sequential route() path must rebase too — a long-lived router
+    used one key at a time otherwise freezes its counters past 2^24."""
+    r = CGRequestRouter(4, alpha=8, block_size=128)
+    r.vw_load = 2 ** 23 + np.arange(r.n_virtual, dtype=float)
+    r.routed = int(r.vw_load.sum())
+    for k in _zipf_keys(64):
+        assert 0 <= r.route(int(k)) < 4
+    assert r.vw_load.max() < 2 ** 23
+    assert abs(r.vw_load.sum() -
+               (np.arange(r.n_virtual).sum() + 64)) < 1e-3
+
+
+def test_route_batch_sharded_matches_unsharded_at_s1():
+    """A router with one source lane must behave exactly like the
+    (previous) unsharded engine: same assignments, same load state."""
+    from repro.kernels.ref import PorcState, ref_porc_route
+    import jax.numpy as jnp
+    keys = _zipf_keys(1777)
+    r = CGRequestRouter(4, alpha=8, eps=0.05, block_size=128, n_sources=1)
+    out = r.route_batch(keys)
+    a_vw, state = ref_porc_route(jnp.asarray(keys, jnp.int32), r.n_virtual,
+                                 block=128, eps=0.05)
+    np.testing.assert_array_equal(out, r.vw_owner[np.asarray(a_vw)])
+    np.testing.assert_allclose(r.vw_load, np.asarray(state.load))
+    assert r.routed == 1777
+
+
+@pytest.mark.parametrize("n_sources", [4, 16])
+def test_route_batch_sharded_conserves_and_balances(n_sources):
+    """Sharded lanes account every message exactly once and keep the
+    per-VW envelope up to one sync window of staleness."""
+    m, eps, block = 8000, 0.05, 16
+    r = CGRequestRouter(4, alpha=8, eps=eps, block_size=block,
+                        n_sources=n_sources, sync_every=2)
+    out = r.route_batch(_zipf_keys(m))
+    assert out.shape == (m,)
+    assert r.routed == m
+    assert abs(r.vw_load.sum() - m) < 1e-3
+    window = n_sources * 2 * block
+    assert r.vw_load.max() <= (1 + eps) * m / r.n_virtual + window + 1
+
+
+def test_route_batch_sharded_state_carries_across_calls():
+    """Lane deltas must survive between route_batch calls — splitting a
+    stream (aligned to S·block and the sync period) changes nothing."""
+    keys = _zipf_keys(2048)
+    kw = dict(alpha=8, eps=0.05, block_size=16, n_sources=4, sync_every=2)
+    r1 = CGRequestRouter(4, **kw)
+    r2 = CGRequestRouter(4, **kw)
+    a_full = r1.route_batch(keys)
+    a_split = np.concatenate([r2.route_batch(keys[:1024]),
+                              r2.route_batch(keys[1024:])])
+    np.testing.assert_array_equal(a_full, a_split)
+    np.testing.assert_allclose(r1.vw_load, r2.vw_load)
 
 
 def test_rebalance_preserves_vw_population():
