@@ -66,7 +66,7 @@ def run(m: int = 200_000, quick: bool = False):
                 record("deployment", scenario=tag, service_ms=sms,
                        scheme=name, msgs_per_sec=float(r.throughput),
                        mean_latency_ms=float(r.mean_latency_ms),
-                       p99_latency_ms=float(r.p99_latency_ms))
+                       max_latency_ms=float(r.max_latency_ms))
                 row.append(fmt(float(r.throughput) / 1000, 1))
                 row.append(fmt(float(r.mean_latency_ms), 2))
             cgr, kgr = res["CG"], res["KG"]

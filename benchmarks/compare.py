@@ -24,6 +24,9 @@ _METRICS = {
     "speedup_vs_sequential", "loop_s", "engine_s", "imbalance_loop",
     "imbalance_engine", "imbalance_ratio", "best_speedup", "min_speedup",
     "replication", "b1_exact", "ms1_exact", "error",
+    "mean_latency_ms", "max_latency_ms", "mean_latency", "queue_spread",
+    "moves", "spike_imbalance", "settled_imbalance",
+    "kg_over_cg_mean_latency", "cg_over_kg_throughput", "parity",
 }
 
 

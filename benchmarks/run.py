@@ -18,8 +18,8 @@ import time
 import jax
 
 from . import (bench_deployment, bench_dynamic, bench_epsilon,
-               bench_moe_router, bench_porc_schemes, bench_queue,
-               bench_schemes_workers, bench_sources,
+               bench_heterogeneous, bench_moe_router, bench_porc_schemes,
+               bench_queue, bench_schemes_workers, bench_sources,
                bench_virtual_workers, common, roofline)
 
 ALL = [
@@ -31,6 +31,8 @@ ALL = [
     ("virtual_workers", bench_virtual_workers),  # Fig 12
     ("dynamic", bench_dynamic),                # Fig 13
     ("deployment", bench_deployment),          # Fig 14/15
+    ("heterogeneous", bench_heterogeneous),    # Figs 9/10+12/13+15 via
+                                               # the delegation runtime
     ("moe_router", bench_moe_router),          # beyond paper
     ("roofline", roofline),                    # §Roofline
 ]

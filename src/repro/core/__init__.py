@@ -1,4 +1,6 @@
 """Paper core: partitioners, Consistent Grouping runtime, simulation."""
-from . import cg, hashing, metrics, partitioners, simulation, streams  # noqa: F401
+from . import (cg, delegation, hashing, metrics, partitioners,  # noqa: F401
+               simulation, streams)
 
-__all__ = ["cg", "hashing", "metrics", "partitioners", "simulation", "streams"]
+__all__ = ["cg", "delegation", "hashing", "metrics", "partitioners",
+           "simulation", "streams"]

@@ -17,12 +17,17 @@ Model fidelity notes
   signals are.
 * **Pairing**: every VW removal from a busy worker is paired with an
   addition to an idle worker (§V-B "pairing virtual workers"), keeping
-  the VW population constant. Within a slot all signals arrive together,
-  so the FCFS queues degenerate to a deterministic severity order
-  (most-overloaded busy ↔ most-underloaded idle); across slots the
-  one-move-per-signal budget reproduces FCFS pacing. The migrated VW is
-  the busy worker's most loaded one (greatest relief); routing changes
-  affect only *future* messages — no message migration (§V-C).
+  the VW population constant. Pairing runs through the shared
+  ``repro.core.delegation`` engine: within a slot signals pair in
+  severity order (most-overloaded busy ↔ most-underloaded idle, the
+  degenerate-FCFS argument of §V-B); ``fcfs_pairing=True`` keeps
+  unserved signals queued across slots (the paper's FCFS queues). The
+  migrated VW is the busy worker's highest-rate one (greatest relief;
+  ``rate_decay`` windows the rate — 1.0 = the seed's cumulative
+  counts); ``capacity_weighted=True`` lets a busy worker shed as many
+  VWs per slot as its rate surplus over its capacity-proportional
+  share instead of one per signal. Routing changes affect only
+  *future* messages — no message migration (§V-C).
 * **Queues**: each worker drains ``c_w·slot_len`` messages per slot from
   an unbounded FIFO — the queueing model of §IV used for Fig 9/10/12/13.
 * **Block-parallel routing** (``block_size``): the paper defines PoRC
@@ -48,6 +53,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import delegation
 from .hashing import hash_to_bins
 
 
@@ -68,13 +74,27 @@ class CGConfig(NamedTuple):
                                   # >1 requires the block path
     sync_every: int = 1           # blocks between delta-merge syncs of
                                   # the sources' local views
+    capacity_weighted: bool = False  # delegation budgets ∝ rate surplus
+                                  # over the capacity-proportional share
+                                  # (False = one VW per pair, seed-exact)
+    rate_decay: float = 1.0       # EWMA decay of per-VW rates per slot;
+                                  # window ≈ 1/(1-decay) slots, 1.0 =
+                                  # cumulative-since-t0 (seed-exact)
+    fcfs_pairing: bool = False    # carry unserved busy/idle signals
+                                  # across slots (the paper's queues)
 
 
 class CGState(NamedTuple):
     vw_load: jnp.ndarray     # [V]  source-side per-VW message counts
     vw_owner: jnp.ndarray    # [V]  physical worker owning each VW
+    vw_rate: jnp.ndarray     # [V]  windowed per-VW arrival rate (EWMA)
     queues: jnp.ndarray      # [n]  worker FIFO occupancy
-    t_offset: jnp.ndarray    # []   messages routed so far
+    signal_queues: delegation.PairQueues   # FCFS busy/idle queues +
+                                           # slot counter (delegation)
+    t_offset: jnp.ndarray    # []   messages routed so far (f32 clock)
+    sg_ptr: jnp.ndarray      # []   exact SG round-robin pointer (i32,
+                             #      kept in [0, V) so it never loses
+                             #      precision, unlike the f32 t_offset)
     moves: jnp.ndarray       # []   cumulative paired moves
 
 
@@ -96,13 +116,27 @@ def init_state(cfg: CGConfig) -> CGState:
     return CGState(
         vw_load=jnp.zeros(V, jnp.float32),
         vw_owner=jnp.tile(jnp.arange(n, dtype=jnp.int32), a),
+        vw_rate=jnp.zeros(V, jnp.float32),
         queues=jnp.zeros(n, jnp.float32),
+        signal_queues=delegation.init_queues(n),
         t_offset=jnp.zeros((), jnp.float32),
+        sg_ptr=jnp.zeros((), jnp.int32),
         moves=jnp.zeros((), jnp.int32),
     )
 
 
-def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
+def delegation_config(cfg: CGConfig) -> delegation.DelegationConfig:
+    """The shared-engine view of a CGConfig's delegation knobs."""
+    return delegation.DelegationConfig(
+        n_workers=cfg.n_workers,
+        n_virtual=cfg.n_workers * cfg.alpha,
+        max_moves_per_slot=cfg.max_moves_per_slot,
+        capacity_weighted=cfg.capacity_weighted,
+        rate_decay=cfg.rate_decay,
+        fcfs=cfg.fcfs_pairing)
+
+
+def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
     """Route one slot of messages onto virtual workers (inner scheme)."""
     V = cfg.n_workers * cfg.alpha
     if cfg.inner == "KG":
@@ -110,8 +144,11 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
         vw_load = vw_load.at[vw].add(1.0)
         return vw_load, vw
     if cfg.inner == "SG":
+        # exact int32 round-robin pointer: the f32 t_offset loses ±1
+        # precision past 2^24 routed messages, which would freeze the
+        # pointer; sg_ptr lives in [0, V) and never degrades.
         m = keys.shape[0]
-        vw = ((t_offset.astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32)) % V)
+        vw = (sg_ptr + jnp.arange(m, dtype=jnp.int32)) % V
         vw_load = vw_load.at[vw].add(1.0)
         return vw_load, vw
 
@@ -174,37 +211,9 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, keys):
     return vw_load, vw
 
 
-def _paired_moves(cfg: CGConfig, vw_load, vw_owner, util):
-    """Worker delegation + pairing: move ≤ max_moves VWs busy→idle."""
-    busy = util > cfg.theta_busy
-    idle = util < cfg.theta_idle
-    n_pairs = jnp.minimum(jnp.sum(busy), jnp.sum(idle))
-    n_pairs = jnp.minimum(n_pairs, cfg.max_moves_per_slot).astype(jnp.int32)
-
-    neg_inf = jnp.float32(-jnp.inf)
-    pos_inf = jnp.float32(jnp.inf)
-    busy_rank = jnp.argsort(jnp.where(busy, -util, pos_inf))   # most busy first
-    idle_rank = jnp.argsort(jnp.where(idle, util, pos_inf))    # most idle first
-
-    def move(i, carry):
-        owner, done = carry
-        src = busy_rank[i]
-        dst = idle_rank[i]
-        owned = owner == src
-        # most-loaded VW of the busy worker
-        v = jnp.argmax(jnp.where(owned, vw_load, neg_inf))
-        can = (i < n_pairs) & jnp.any(owned)
-        owner = owner.at[v].set(jnp.where(can, dst, owner[v]).astype(owner.dtype))
-        return owner, done + can.astype(jnp.int32)
-
-    vw_owner, n_done = jax.lax.fori_loop(
-        0, cfg.max_moves_per_slot, move, (vw_owner, jnp.int32(0)))
-    return vw_owner, n_done
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def run(cfg: CGConfig, keys: jnp.ndarray,
-        capacities: jnp.ndarray) -> CGResult:
+def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
+        state: CGState | None = None) -> CGResult:
     """Run CG over a key stream.
 
     Args:
@@ -212,6 +221,10 @@ def run(cfg: CGConfig, keys: jnp.ndarray,
       keys: [m] int32 key stream; m must be a multiple of slot_len.
       capacities: [n] static, or [slots, n] time-varying *service rates*
         in messages per unit time (arrival rate is 1 msg/unit time).
+      state: optional CGState to continue from (e.g. ``result.state`` of
+        a previous ``run`` over the stream prefix) — routing loads, the
+        owner map, delegation queues and the SG pointer all carry over.
+        ``capacities`` rows, if 2-D, cover only the *remaining* slots.
 
     Returns CGResult with per-slot metrics and the full assignment.
     """
@@ -224,10 +237,12 @@ def run(cfg: CGConfig, keys: jnp.ndarray,
     else:
         caps = capacities
     caps = caps.astype(jnp.float32)
+    dcfg = delegation_config(cfg)
 
     def slot_step(state: CGState, xs):
         slot_keys, c = xs
-        vw_load, vw = _route_slot(cfg, state.vw_load, state.t_offset, slot_keys)
+        vw_load, vw = _route_slot(cfg, state.vw_load, state.t_offset,
+                                  state.sg_ptr, slot_keys)
         workers = state.vw_owner[vw]                       # [slot_len]
         arrivals = jnp.zeros(cfg.n_workers, jnp.float32).at[workers].add(1.0)
 
@@ -244,20 +259,33 @@ def run(cfg: CGConfig, keys: jnp.ndarray,
         imb = (jnp.max(norm_load) - jnp.mean(norm_load)) / jnp.maximum(
             jnp.mean(norm_load), 1e-9)
 
-        vw_owner, n_moved = _paired_moves(cfg, vw_load, state.vw_owner, util)
+        # worker delegation through the shared engine (§V-B pairing):
+        # per-VW arrivals this slot feed the windowed rates; capacities
+        # drive the capacity-proportional budgets when enabled.
+        dstate = delegation.DelegationState(
+            vw_owner=state.vw_owner,
+            vw_rate=state.vw_rate,
+            queues=state.signal_queues,
+            moves=state.moves)
+        dstate, _ = delegation.rebalance_step(
+            dcfg, dstate, util, util > cfg.theta_busy,
+            util < cfg.theta_idle, vw_load - state.vw_load, c)
 
         new_state = CGState(
             vw_load=vw_load,
-            vw_owner=vw_owner,
+            vw_owner=dstate.vw_owner,
+            vw_rate=dstate.vw_rate,
             queues=q1,
+            signal_queues=dstate.queues,
             t_offset=state.t_offset + cfg.slot_len,
-            moves=state.moves + n_moved,
+            sg_ptr=(state.sg_ptr + cfg.slot_len) % (cfg.n_workers * cfg.alpha),
+            moves=dstate.moves,
         )
         metrics = (workers, vw, imb, jnp.max(q1) - jnp.min(q1),
                    jnp.max(lat) - jnp.min(lat), mean_lat, util)
         return new_state, metrics
 
-    state0 = init_state(cfg)
+    state0 = init_state(cfg) if state is None else state
     state, (workers, vw, imb, qs, ls, ml, util) = jax.lax.scan(
         slot_step, state0, (keys, caps))
     return CGResult(

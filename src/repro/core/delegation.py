@@ -1,0 +1,296 @@
+"""Capacity-weighted worker delegation — the shared rebalance engine.
+
+The paper's delegation half of CG (§V-B "pairing virtual workers",
+§V-C monitoring/piggybacking) in one jit-able engine, shared by the
+simulator (``core.cg``), the serving router (``serve.engine``) and the
+straggler balancer (``runtime.straggler``) — previously three divergent
+implementations.
+
+Semantics
+---------
+* **Windowed load rates.** Per-VW arrival rates are tracked as an
+  exponentially-windowed sum ``rate ← rate_decay·rate + arrivals`` with
+  effective window ≈ 1/(1−rate_decay) monitoring slots.
+  ``rate_decay=1.0`` keeps the cumulative-since-t₀ counts of the seed
+  implementation (and the paper's m_t bookkeeping); < 1 makes the
+  migration choice and the capacity-weighted budgets track *recent*
+  traffic, which is what lets the engine follow Fig 12/13's
+  time-varying capacities instead of averaging over the whole past.
+* **Severity order with FCFS carry-over.** Busy and idle signals enter
+  per-worker queues; pairing order is FIFO over *enqueue slot* with
+  ties (signals that arrived in the same slot) broken by severity —
+  exactly the degenerate-FCFS argument of §V-B, but the queues now
+  survive across slots (``fcfs=True``): a busy worker that the move
+  budget could not serve this slot keeps its place at the head of the
+  queue next slot, the paper's queue behaviour that previously lived
+  only in ``runtime/straggler.py``. ``fcfs=False`` rebuilds the queues
+  from the current signals each slot (the seed behaviour).
+* **Capacity-proportional move budgets.** With
+  ``capacity_weighted=True`` a busy worker sheds as many VWs as its
+  rate surplus over its capacity-proportional share
+  (``round((R_w − c_w/Σc·R)/​(R/V))``, clipped to what it owns), and an
+  idle worker absorbs up to its deficit — a 0.3×-speed worker drains to
+  the fleet's normalized utilization in one or two slots instead of one
+  VW per slot. ``capacity_weighted=False`` is the seed's one-VW-per-pair
+  pacing. Either way at most ``max_moves_per_slot`` moves execute per
+  slot and **only executed moves** consume budget: a busy worker that
+  owns no VWs is skipped (run-length zero in the schedule), it does not
+  burn the pair's slot like the seed ``cg._paired_moves`` did.
+* **Device residency.** The owner map, rates and queues are jnp arrays
+  threaded through ``rebalance_step`` (fully jit-compiled); callers
+  never loop over VWs on the host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NOT_QUEUED = jnp.iinfo(jnp.int32).max     # sorts after every real slot
+
+
+class DelegationConfig(NamedTuple):
+    n_workers: int
+    n_virtual: int                 # 0 is fine for pairing-only use
+    max_moves_per_slot: int = 8
+    capacity_weighted: bool = False  # budgets ∝ rate surplus/deficit
+    rate_decay: float = 1.0        # EWMA decay of per-VW rates
+                                   # (1.0 = cumulative, the seed behaviour)
+    fcfs: bool = False             # carry unpaired signals across slots
+
+
+class PairQueues(NamedTuple):
+    """FCFS signal queues: the slot each worker entered the busy/idle
+    queue (``NOT_QUEUED`` = not enqueued) plus the slot counter."""
+    busy_since: jnp.ndarray   # [n] i32
+    idle_since: jnp.ndarray   # [n] i32
+    slot: jnp.ndarray         # []  i32
+
+
+class DelegationState(NamedTuple):
+    vw_owner: jnp.ndarray     # [V] i32 physical worker owning each VW
+    vw_rate: jnp.ndarray      # [V] f32 windowed per-VW arrival rate
+    queues: PairQueues
+    moves: jnp.ndarray        # []  i32 cumulative executed moves
+
+
+def init_queues(n_workers: int) -> PairQueues:
+    return PairQueues(
+        busy_since=jnp.full((n_workers,), NOT_QUEUED, jnp.int32),
+        idle_since=jnp.full((n_workers,), NOT_QUEUED, jnp.int32),
+        slot=jnp.zeros((), jnp.int32))
+
+
+def init_state(cfg: DelegationConfig,
+               vw_owner: jnp.ndarray | None = None) -> DelegationState:
+    if vw_owner is None:
+        vw_owner = jnp.tile(
+            jnp.arange(cfg.n_workers, dtype=jnp.int32),
+            max(1, cfg.n_virtual // max(cfg.n_workers, 1)))[: cfg.n_virtual]
+    return DelegationState(
+        vw_owner=jnp.asarray(vw_owner, jnp.int32),
+        vw_rate=jnp.zeros((cfg.n_virtual,), jnp.float32),
+        queues=init_queues(cfg.n_workers),
+        moves=jnp.zeros((), jnp.int32))
+
+
+def _enqueue(cfg: DelegationConfig, busy, idle, q: PairQueues):
+    """Admit this slot's signals into the FCFS queues. A worker whose
+    signal flips is dequeued from the opposite queue; with ``fcfs``
+    off the queues are rebuilt from the current signals (seed mode)."""
+    if cfg.fcfs:
+        b = jnp.where(busy & (q.busy_since == NOT_QUEUED), q.slot,
+                      q.busy_since)
+        b = jnp.where(idle, NOT_QUEUED, b)
+        i = jnp.where(idle & (q.idle_since == NOT_QUEUED), q.slot,
+                      q.idle_since)
+        i = jnp.where(busy, NOT_QUEUED, i)
+        return b, i
+    return (jnp.where(busy, q.slot, NOT_QUEUED),
+            jnp.where(idle, q.slot, NOT_QUEUED))
+
+
+def _fcfs_rank(enq, severity):
+    """Queued workers first, ordered by (enqueue slot asc, severity asc),
+    ties by worker index — the FCFS queue with in-slot severity order.
+    ``severity`` must already be ascending-is-first (negate for busy)."""
+    sev = jnp.where(enq == NOT_QUEUED, jnp.inf, severity)
+    order = jnp.argsort(sev, stable=True)
+    return order[jnp.argsort(enq[order], stable=True)]
+
+
+def _budgets(cfg: DelegationConfig, owned_count, rate_w, in_busy, in_idle,
+             capacities):
+    """Per-worker shed/absorb budgets (VW counts) for this slot."""
+    one = jnp.minimum(owned_count, 1)
+    if not cfg.capacity_weighted:
+        shed = jnp.where(in_busy, one, 0)
+        absorb = jnp.where(in_idle, 1, 0)
+        return shed.astype(jnp.int32), absorb.astype(jnp.int32)
+    total = jnp.sum(rate_w)
+    share = capacities / jnp.maximum(jnp.sum(capacities), 1e-9)
+    target = share * total                       # capacity-proportional
+    per_vw = jnp.maximum(total / max(cfg.n_virtual, 1), 1e-9)
+    surplus = jnp.round((rate_w - target) / per_vw).astype(jnp.int32)
+    deficit = jnp.round((target - rate_w) / per_vw).astype(jnp.int32)
+    # a busy signal always sheds at least one VW if it owns any (the
+    # FCFS pacing floor — the seed behaviour is the lower bound), and
+    # never more than it owns; an idle signal absorbs at least one.
+    shed = jnp.where(in_busy, jnp.clip(surplus, one, owned_count), 0)
+    absorb = jnp.where(in_idle, jnp.maximum(deficit, 1), 0)
+    return shed.astype(jnp.int32), absorb.astype(jnp.int32)
+
+
+def _schedule(cfg: DelegationConfig, busy_rank, idle_rank, shed, absorb):
+    """Expand per-worker budgets into per-move (src, dst) sequences.
+
+    Move j draws its source from the run-length decoding of the shed
+    budgets in FCFS/severity order (a worker with budget 0 — e.g. no
+    VWs — occupies zero run length, i.e. is skipped for free) and its
+    destination from the absorb budgets likewise.
+    """
+    M = cfg.max_moves_per_slot
+    last = max(cfg.n_workers - 1, 0)
+    cs = jnp.cumsum(shed[busy_rank])
+    ca = jnp.cumsum(absorb[idle_rank])
+    j = jnp.arange(M, dtype=jnp.int32)
+    src = busy_rank[jnp.clip(jnp.searchsorted(cs, j, side="right"), 0, last)]
+    dst = idle_rank[jnp.clip(jnp.searchsorted(ca, j, side="right"), 0, last)]
+    n_exec = jnp.minimum(jnp.minimum(cs[-1], ca[-1]),
+                         jnp.int32(M)).astype(jnp.int32)
+    return src, dst, n_exec
+
+
+def _execute(cfg: DelegationConfig, vw_owner, vw_rate, src, dst, n_exec):
+    """Apply the scheduled moves: each move re-homes the source worker's
+    highest-rate VW (greatest relief). Sequential because a worker
+    shedding k VWs must pick its top-k one at a time as ownership
+    changes under it."""
+    n = cfg.n_workers
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def body(j, carry):
+        owner, done, served_src, served_dst = carry
+        s, d = src[j], dst[j]
+        owned = owner == s
+        v = jnp.argmax(jnp.where(owned, vw_rate, neg_inf))
+        can = (j < n_exec) & jnp.any(owned)
+        owner = owner.at[v].set(jnp.where(can, d, owner[v]).astype(owner.dtype))
+        step = can.astype(jnp.int32)
+        return (owner, done + step,
+                served_src.at[s].add(step), served_dst.at[d].add(step))
+
+    zeros = jnp.zeros((n,), jnp.int32)
+    return jax.lax.fori_loop(0, cfg.max_moves_per_slot, body,
+                             (vw_owner, jnp.int32(0), zeros, zeros))
+
+
+def seed_pairing_reference(n, max_moves, vw_load, vw_owner, util,
+                           theta_busy=0.85, theta_idle=0.75):
+    """NumPy reference of the seed ``cg._paired_moves`` semantics — the
+    specification the uniform-capacity engine is gated against (tests
+    and ``benchmarks/bench_heterogeneous``'s parity gate both use it).
+
+    One VW per busy/idle pair in severity order, the migrated VW is the
+    busy worker's most loaded, and — deliberately preserved — a busy
+    worker owning no VWs *burns* its pairing slot. The engine fixes
+    that last behaviour (run-length-zero skip), so parity holds exactly
+    on scenarios where every busy worker owns at least one VW.
+    """
+    busy, idle = util > theta_busy, util < theta_idle
+    n_pairs = min(busy.sum(), idle.sum(), max_moves)
+    busy_rank = np.argsort(np.where(busy, -util, np.inf), kind="stable")
+    idle_rank = np.argsort(np.where(idle, util, np.inf), kind="stable")
+    owner, done = vw_owner.copy(), 0
+    for i in range(min(max_moves, n)):
+        src, dst = busy_rank[i], idle_rank[i]
+        owned = owner == src
+        if i < n_pairs and owned.any():
+            owner[np.argmax(np.where(owned, vw_load, -np.inf))] = dst
+            done += 1
+    return owner, done
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
+               busy, idle):
+    """Pairing-only entry point (no owner map): returns the (src, dst)
+    move schedule with unit budgets, for callers that execute moves
+    themselves (e.g. the straggler balancer moving pipeline shards).
+
+    Args:
+      queues: persistent ``PairQueues`` (FCFS carry-over when cfg.fcfs).
+      pressure: [n] f32, higher = more overloaded (orders busy workers
+        descending and idle workers ascending).
+      busy/idle: [n] bool signal masks for this slot.
+
+    Returns (src [M] i32, dst [M] i32, n_pairs i32, new PairQueues);
+    only the first ``n_pairs`` schedule entries are valid.
+    """
+    pressure = jnp.asarray(pressure, jnp.float32)
+    busy_since, idle_since = _enqueue(cfg, busy, idle, queues)
+    busy_rank = _fcfs_rank(busy_since, -pressure)
+    idle_rank = _fcfs_rank(idle_since, pressure)
+    shed = (busy_since != NOT_QUEUED).astype(jnp.int32)
+    absorb = (idle_since != NOT_QUEUED).astype(jnp.int32)
+    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    lt = jnp.arange(cfg.max_moves_per_slot, dtype=jnp.int32) < n_exec
+    served_src = jnp.zeros((cfg.n_workers,), jnp.int32).at[src].add(
+        lt.astype(jnp.int32))
+    served_dst = jnp.zeros((cfg.n_workers,), jnp.int32).at[dst].add(
+        lt.astype(jnp.int32))
+    busy_since = jnp.where(served_src >= shed, NOT_QUEUED, busy_since)
+    idle_since = jnp.where(served_dst >= absorb, NOT_QUEUED, idle_since)
+    return src, dst, n_exec, PairQueues(busy_since, idle_since,
+                                        queues.slot + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
+                   busy, idle, vw_arrivals, capacities):
+    """One monitoring-slot tick of the full engine.
+
+    Updates the windowed VW rates from this slot's arrivals, admits the
+    signals into the FCFS queues, computes (capacity-weighted) move
+    budgets, schedules busy→idle pairs in severity/FCFS order and
+    executes them on the device-resident owner map.
+
+    Args:
+      pressure: [n] f32 severity (e.g. utilization or queue occupancy).
+      busy/idle: [n] bool delegation signals.
+      vw_arrivals: [V] f32 per-VW arrivals since the previous tick.
+      capacities: [n] f32 service-rate estimates (any scale — only the
+        shares matter); ignored unless ``cfg.capacity_weighted``.
+
+    Returns (new DelegationState, n_moved i32).
+    """
+    pressure = jnp.asarray(pressure, jnp.float32)
+    rate = cfg.rate_decay * state.vw_rate + jnp.asarray(vw_arrivals,
+                                                       jnp.float32)
+    busy_since, idle_since = _enqueue(cfg, busy, idle, state.queues)
+    in_busy = busy_since != NOT_QUEUED
+    in_idle = idle_since != NOT_QUEUED
+    busy_rank = _fcfs_rank(busy_since, -pressure)
+    idle_rank = _fcfs_rank(idle_since, pressure)
+    n = cfg.n_workers
+    owned_count = jnp.zeros((n,), jnp.int32).at[state.vw_owner].add(1)
+    rate_w = jnp.zeros((n,), jnp.float32).at[state.vw_owner].add(rate)
+    shed, absorb = _budgets(cfg, owned_count, rate_w, in_busy, in_idle,
+                            jnp.asarray(capacities, jnp.float32))
+    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    owner, n_done, served_src, served_dst = _execute(
+        cfg, state.vw_owner, rate, src, dst, n_exec)
+    # fully-served workers leave their queue; partially-served ones keep
+    # their FCFS position for the next slot (budgets are re-derived from
+    # fresh rates each slot, only membership carries over).
+    busy_since = jnp.where(served_src >= shed, NOT_QUEUED, busy_since)
+    idle_since = jnp.where(served_dst >= absorb, NOT_QUEUED, idle_since)
+    new_state = DelegationState(
+        vw_owner=owner,
+        vw_rate=rate,
+        queues=PairQueues(busy_since, idle_since, state.queues.slot + 1),
+        moves=state.moves + n_done)
+    return new_state, n_done

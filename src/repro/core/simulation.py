@@ -78,7 +78,10 @@ def simulate_queues(assignment: jnp.ndarray, capacities: jnp.ndarray,
 class DeploymentResult(NamedTuple):
     throughput: jnp.ndarray      # messages/second sustained
     mean_latency_ms: jnp.ndarray
-    p99_latency_ms: jnp.ndarray
+    max_latency_ms: jnp.ndarray  # latency at the worst (slowest) worker
+                                 # — an upper bound on p99, not a
+                                 # percentile (there is no per-message
+                                 # distribution in this fluid model)
 
 
 def simulate_deployment(assignment: jnp.ndarray, n_workers: int,
@@ -118,5 +121,5 @@ def simulate_deployment(assignment: jnp.ndarray, n_workers: int,
     wait = rho / (2.0 * (1.0 - rho)) * s_ms                # M/D/1
     lat_ms = s_ms + wait
     mean_lat = jnp.sum(lat_ms * share)
-    p99 = jnp.max(jnp.where(share > 0, lat_ms, 0.0))
-    return DeploymentResult(throughput, mean_lat, p99)
+    max_lat = jnp.max(jnp.where(share > 0, lat_ms, 0.0))
+    return DeploymentResult(throughput, mean_lat, max_lat)

@@ -4,16 +4,24 @@ Each data-parallel host monitors its own step time (the "worker
 monitors its workload" of §V-C) and emits a **binary** signal — busy
 (step time above θ_b × median) or idle (below θ_i × median). Signals
 piggyback on the per-step metrics the trainer already collects (no
-extra communication round — the paper's piggybacking). The balancer
-pairs busy hosts with idle hosts FCFS and moves one pipeline shard
-(virtual worker) per pair; routing changes affect only future batches.
+extra communication round — the paper's piggybacking).
+
+Pairing is a thin adapter over the shared ``repro.core.delegation``
+engine (the same FCFS-with-severity-order queues the CG simulator and
+the serving router use): busy hosts pair with idle hosts in severity
+order, signals the move budget could not serve carry over FCFS to the
+next slot, and one pipeline shard (virtual worker) moves per pair;
+routing changes affect only future batches.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
 
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core import delegation
 
 
 @dataclass
@@ -33,16 +41,21 @@ class DelegationBalancer:
     def __post_init__(self):
         self._hist: list[deque] = [deque(maxlen=self.cfg.window)
                                    for _ in range(self.n_hosts)]
-        self._busy_queue: deque = deque()   # FCFS (paper §V-B pairing)
-        self._idle_queue: deque = deque()
+        self._dcfg = delegation.DelegationConfig(
+            n_workers=self.n_hosts, n_virtual=0,
+            max_moves_per_slot=self.cfg.max_moves_per_slot, fcfs=True)
+        self._queues = delegation.init_queues(self.n_hosts)
         self.moves: list[tuple[int, int]] = []
 
     def observe(self, host: int, step_time_s: float) -> None:
         self._hist[host].append(step_time_s)
 
+    def _means(self) -> list[float]:
+        return [np.mean(h) if h else np.nan for h in self._hist]
+
     def signals(self) -> tuple[list[int], list[int]]:
         """Binary delegation signals after the current slot."""
-        means = [np.mean(h) if h else np.nan for h in self._hist]
+        means = self._means()
         med = np.nanmedian(means)
         busy, idle = [], []
         if not np.isfinite(med) or med <= 0:
@@ -57,23 +70,24 @@ class DelegationBalancer:
         return busy, idle
 
     def rebalance(self, pipeline) -> list[tuple[int, int]]:
-        """Pair busy→idle hosts FCFS and move one shard per pair
-        (bounded per slot). ``pipeline`` must expose move_shard()."""
+        """Pair busy→idle hosts (severity order, FCFS carry-over across
+        slots, bounded per slot) and move one shard per pair.
+        ``pipeline`` must expose move_shard()."""
         busy, idle = self.signals()
-        for h in busy:
-            if h not in self._busy_queue:
-                self._busy_queue.append(h)
-        for h in idle:
-            if h not in self._idle_queue:
-                self._idle_queue.append(h)
+        means = np.asarray(self._means(), np.float32)
+        busy_mask = np.zeros(self.n_hosts, bool)
+        busy_mask[busy] = True
+        idle_mask = np.zeros(self.n_hosts, bool)
+        idle_mask[idle] = True
+        pressure = np.where(np.isfinite(means), means, 0.0)
+        src, dst, n_pairs, self._queues = delegation.plan_pairs(
+            self._dcfg, self._queues, jnp.asarray(pressure),
+            jnp.asarray(busy_mask), jnp.asarray(idle_mask))
+        src, dst = np.asarray(src), np.asarray(dst)
         moved = []
-        for _ in range(self.cfg.max_moves_per_slot):
-            if not self._busy_queue or not self._idle_queue:
-                break
-            src = self._busy_queue.popleft()
-            dst = self._idle_queue.popleft()
-            sid = pipeline.move_shard(src, dst)
+        for j in range(int(n_pairs)):
+            sid = pipeline.move_shard(int(src[j]), int(dst[j]))
             if sid is not None:
-                moved.append((src, dst))
+                moved.append((int(src[j]), int(dst[j])))
         self.moves.extend(moved)
         return moved

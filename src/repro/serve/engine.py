@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import delegation
 from repro.core.hashing import hash_to_bins
 from repro.kernels.ref import (multisource_merge, multisource_state_init,
                                ref_porc_multisource)
@@ -45,6 +46,14 @@ class CGRequestRouter:
     lane routes against its local view, delta-merged every
     ``sync_every`` blocks); ``n_sources=1`` is the single-source block
     path, bit-identical to the previous engine.
+
+    Delegation runs through the shared ``repro.core.delegation`` engine:
+    the virtual-replica owner map, the windowed per-VW rates and the
+    FCFS signal queues are device-resident (``rebalance`` is one jitted
+    call — no per-VW host loop, no NumPy round-trip of the load vector),
+    pairing is severity-ordered with FCFS carry-over across rebalance
+    ticks, and ``capacity_weighted=True`` sheds VWs from a slow replica
+    until its share matches its measured capacity.
     """
     n_replicas: int
     alpha: int = 8
@@ -56,13 +65,41 @@ class CGRequestRouter:
                                   # 1 = exact per-message Alg. 1
     n_sources: int = 1            # source lanes a batch is sharded over
     sync_every: int = 1           # blocks between lane delta-merges
+    capacity_weighted: bool = False  # budgets ∝ measured capacity share
+    rate_decay: float = 0.6       # EWMA decay of per-VW rates per
+                                  # rebalance tick (1.0 = cumulative)
+    max_moves_per_rebalance: int = 8
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
-        self.vw_owner = np.repeat(np.arange(self.n_replicas), self.alpha)
         self._state = multisource_state_init(self.n_virtual, self.n_sources)
         self._routed = 0
         self.moves = 0
+        self._dcfg = delegation.DelegationConfig(
+            n_workers=self.n_replicas, n_virtual=self.n_virtual,
+            max_moves_per_slot=self.max_moves_per_rebalance,
+            capacity_weighted=self.capacity_weighted,
+            rate_decay=self.rate_decay, fcfs=True)
+        self._dstate = delegation.init_state(
+            self._dcfg,
+            vw_owner=jnp.repeat(jnp.arange(self.n_replicas, dtype=jnp.int32),
+                                self.alpha))
+        self._rated_load = jnp.zeros(self.n_virtual, jnp.float32)
+        # host mirror of "any signal carried in the FCFS queues", so the
+        # no-candidate early return never strands a carried signal
+        self._queued_busy = False
+        self._queued_idle = False
+
+    @property
+    def vw_owner(self) -> np.ndarray:
+        """Virtual-replica → replica map, as a fresh NumPy download (the
+        authoritative copy is device-resident). Assign to replace it."""
+        return np.asarray(self._dstate.vw_owner)
+
+    @vw_owner.setter
+    def vw_owner(self, value) -> None:
+        self._dstate = self._dstate._replace(
+            vw_owner=jnp.asarray(value, jnp.int32))
 
     @property
     def vw_load(self) -> np.ndarray:
@@ -78,6 +115,13 @@ class CGRequestRouter:
         self._state = self._state._replace(
             base=jnp.asarray(value),
             delta=jnp.zeros_like(self._state.delta))
+        # a reseeded load is a restore: seed the delegation rates with
+        # it (cumulative mode keeps rate == load; windowed mode starts
+        # its window from the restored distribution) and realign the
+        # tracker so the next rebalance sees zero phantom arrivals.
+        self._rated_load = jnp.asarray(value)
+        self._dstate = self._dstate._replace(
+            vw_rate=jnp.asarray(value))
         # conservation invariant: routed == total load. Re-deriving it
         # here keeps the host-side rebase trigger sound after a state
         # restore that only seeds the loads; assign ``routed`` after
@@ -109,6 +153,7 @@ class CGRequestRouter:
         self._state = self._state._replace(
             base=self._state.base - shift,
             routed=jnp.float32(self._routed))
+        self._rated_load = self._rated_load - shift   # keep deltas exact
 
     def route(self, key: int) -> int:
         """PoRC over virtual replicas (Alg. 1), then owner lookup.
@@ -137,7 +182,7 @@ class CGRequestRouter:
         self._state = state._replace(
             base=jnp.asarray(load, jnp.float32),
             routed=jnp.float32(self._routed))
-        return int(self.vw_owner[vw])
+        return int(self._dstate.vw_owner[vw])
 
     def route_batch(self, keys: np.ndarray) -> np.ndarray:
         """Sharded block-parallel PoRC over virtual replicas (the
@@ -154,20 +199,54 @@ class CGRequestRouter:
             sync_every=self.sync_every, block=self.block_size,
             eps=self.eps, state=self._state)
         self._routed += len(keys)
-        return self.vw_owner[np.asarray(assign_vw)]
+        # owner gather on device — the owner map never leaves it
+        return np.asarray(jnp.take(self._dstate.vw_owner,
+                                   jnp.asarray(assign_vw)))
 
-    def rebalance(self, busy: list[int], idle: list[int]) -> int:
-        """Paired moves: one virtual replica per (busy, idle) pair."""
-        moved = 0
-        loads = self.vw_load                  # one device download
-        for b, i in zip(busy, idle):
-            owned = np.flatnonzero(self.vw_owner == b)
-            if len(owned) == 0:
-                continue
-            # move the most-loaded virtual replica (greatest relief)
-            vw = owned[np.argmax(loads[owned])]
-            self.vw_owner[vw] = i
-            moved += 1
+    def rebalance(self, busy: list[int], idle: list[int],
+                  pressure=None, capacities=None) -> int:
+        """Paired moves through the shared delegation engine.
+
+        Busy replicas pair with idle ones in severity order (``pressure``
+        — e.g. queue occupancy; higher = more overloaded) with FCFS
+        carry-over across calls; without ``pressure`` the list order of
+        ``busy``/``idle`` is taken as the severity order, which keeps
+        the legacy call signature working. One jitted call updates the
+        device-resident owner map, rates and queues — no per-VW host
+        loop. ``capacities`` (any scale) drives capacity-proportional
+        budgets when the router is ``capacity_weighted``.
+        """
+        # carried FCFS signals count as candidates: a busy replica left
+        # queued by an earlier budget must still pair when only the
+        # idle side shows up this tick (and vice versa)
+        if ((not len(busy) and not self._queued_busy)
+                or (not len(idle) and not self._queued_idle)):
+            return 0
+        n = self.n_replicas
+        if pressure is None:
+            p = np.zeros(n, np.float32)
+            for j, b in enumerate(busy):
+                p[b] = 1e6 - j          # earlier in the list = more severe
+            for j, i in enumerate(idle):
+                p[i] = -1e6 + j         # earlier in the list = more idle
+        else:
+            p = np.asarray(pressure, np.float32)
+        busy_mask = np.zeros(n, bool)
+        busy_mask[list(busy)] = True
+        idle_mask = np.zeros(n, bool)
+        idle_mask[list(idle)] = True
+        load = self._state.base + self._state.delta.sum(0)   # device
+        caps = (jnp.ones(n, jnp.float32) if capacities is None
+                else jnp.asarray(capacities, jnp.float32))
+        self._dstate, moved = delegation.rebalance_step(
+            self._dcfg, self._dstate, jnp.asarray(p),
+            jnp.asarray(busy_mask), jnp.asarray(idle_mask),
+            load - self._rated_load, caps)
+        self._rated_load = load
+        q = self._dstate.queues
+        self._queued_busy = bool(jnp.any(q.busy_since != delegation.NOT_QUEUED))
+        self._queued_idle = bool(jnp.any(q.idle_since != delegation.NOT_QUEUED))
+        moved = int(moved)
         self.moves += moved
         return moved
 
@@ -183,6 +262,11 @@ class ServingEngine:
         self.router = router or CGRequestRouter(len(replica_fns))
         self.max_batch = max_batch
         self.latencies: list[float] = []
+        # per-replica capacity estimate from served/queue telemetry
+        # (EWMA of requests actually drained per tick while there was
+        # work) — what the delegation engine's capacity-weighted
+        # budgets consume; replicas never reveal capacities directly.
+        self.capacity_estimates = np.full(len(self.fns), float(max_batch))
 
     def submit(self, key: int, payload) -> None:
         """Single-request submit — routed through the batch path (a
@@ -197,9 +281,13 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine tick: each replica serves up to max_batch requests,
-        then delegation signals fire and the router re-pairs."""
+        then delegation signals fire and the router re-pairs busy↔idle
+        in severity order (most-overloaded with most-idle, §V-B) using
+        queue occupancy as the pressure signal."""
         served = 0
+        occupancy = np.zeros(len(self.replicas), np.float32)
         for i, (rep, fn) in enumerate(zip(self.replicas, self.fns)):
+            had_work = bool(rep.queue)
             batch = []
             while rep.queue and len(batch) < self.max_batch:
                 batch.append(rep.queue.popleft())
@@ -209,13 +297,25 @@ class ServingEngine:
                 self.latencies.extend(now - t for t, _ in batch)
                 rep.served += len(batch)
                 served += len(batch)
+            # only *saturated* ticks reveal capacity: a full batch, or a
+            # queue still backed up after serving, means the replica
+            # drained at its limit. A partial batch that empties the
+            # queue measures demand, not capacity — folding it in would
+            # rank a fast lightly-loaded replica *below* an overloaded
+            # one and invert the capacity-weighted budgets.
+            if had_work and (len(batch) == self.max_batch or rep.queue):
+                self.capacity_estimates[i] = (
+                    0.7 * self.capacity_estimates[i] + 0.3 * len(batch))
             occ = len(rep.queue) / self.router.max_queue
+            occupancy[i] = occ
             rep.busy_signal = occ > self.router.queue_hi
             rep.idle_signal = occ < self.router.queue_lo
         busy = [i for i, r in enumerate(self.replicas) if r.busy_signal]
         idle = [i for i, r in enumerate(self.replicas) if r.idle_signal]
-        if busy and idle:
-            self.router.rebalance(busy, idle)
+        if busy or idle:    # the router pairs carried FCFS signals too
+            self.router.rebalance(busy, idle, pressure=occupancy,
+                                  capacities=np.maximum(
+                                      self.capacity_estimates, 1e-3))
         return served
 
     def queue_depths(self) -> list[int]:

@@ -186,3 +186,129 @@ def test_multisource_requires_block_path(keys):
                       n_sources=4)
     with pytest.raises(ValueError):
         cg.run(cfg, keys[:10_000], _caps(4, 1, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# SG round-robin pointer (exact int32, not the f32 t_offset)
+# ---------------------------------------------------------------------------
+
+def test_sg_pointer_exact_over_full_stream(keys):
+    """inner=SG is a global round-robin: the VW sequence must be exactly
+    arange(m) % V with no drift across slot boundaries."""
+    cfg = cg.CGConfig(n_workers=6, alpha=5, slot_len=10_000, inner="SG")
+    m = 100_000
+    res = cg.run(cfg, keys[:m], _caps(6, 1, 1.0))
+    np.testing.assert_array_equal(np.asarray(res.vw_assignment),
+                                  np.arange(m, dtype=np.int64) % 30)
+    assert int(res.state.sg_ptr) == m % 30
+
+
+def test_sg_pointer_survives_f32_clock_saturation(keys):
+    """Past 2^24 routed messages the f32 t_offset cannot advance by
+    slot_len·k exactly; the int32 sg_ptr must keep the round-robin
+    exact. Simulated by continuing from a state whose clock sits at the
+    f32 precision edge."""
+    cfg = cg.CGConfig(n_workers=6, alpha=5, slot_len=10_000, inner="SG")
+    V = 30
+    big = 2.0 ** 24                     # t_offset += 10_000 is inexact here
+    state = cg.init_state(cfg)._replace(
+        t_offset=jnp.float32(big), sg_ptr=jnp.int32(7))
+    res = cg.run(cfg, keys[:20_000], _caps(6, 1, 1.0), state)
+    np.testing.assert_array_equal(
+        np.asarray(res.vw_assignment),
+        (7 + np.arange(20_000, dtype=np.int64)) % V)
+    assert int(res.state.sg_ptr) == (7 + 20_000) % V
+
+
+# ---------------------------------------------------------------------------
+# run(..., state=...) continuation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inner", ["PORC", "SG"])
+def test_run_state_continuation_matches_single_run(keys, inner):
+    """Two runs chained through ``state`` must equal one run over the
+    concatenated stream (routing loads, owner map, queues, delegation
+    FCFS queues and the SG pointer all carry over)."""
+    sub = keys[:60_000]
+    caps = _caps(10, 3, 5.0)
+    cfg = cg.CGConfig(n_workers=10, slot_len=10_000, inner=inner,
+                      capacity_weighted=True, rate_decay=0.5,
+                      fcfs_pairing=True)
+    full = cg.run(cfg, sub, caps)
+    r1 = cg.run(cfg, sub[:30_000], caps)
+    r2 = cg.run(cfg, sub[30_000:], caps, r1.state)
+    np.testing.assert_array_equal(
+        np.asarray(full.assignment),
+        np.concatenate([np.asarray(r1.assignment), np.asarray(r2.assignment)]))
+    np.testing.assert_allclose(np.asarray(full.state.vw_load),
+                               np.asarray(r2.state.vw_load))
+    np.testing.assert_array_equal(np.asarray(full.state.vw_owner),
+                                  np.asarray(r2.state.vw_owner))
+    assert int(full.moves) == int(r2.moves)
+
+
+# ---------------------------------------------------------------------------
+# capacity-weighted delegation (the shared engine inside the simulator)
+# ---------------------------------------------------------------------------
+
+def test_capacity_weighted_conserves_vw_population(keys):
+    cfg = cg.CGConfig(n_workers=8, alpha=10, eps=0.01, slot_len=10_000,
+                      capacity_weighted=True, rate_decay=0.6,
+                      fcfs_pairing=True, max_moves_per_slot=16)
+    res = cg.run(cfg, keys, _caps(8, 2, 4.0))
+    owners = np.asarray(res.state.vw_owner)
+    assert owners.shape == (80,)
+    assert owners.min() >= 0 and owners.max() < 8
+    assert np.bincount(owners, minlength=8).sum() == 80
+    assert int(res.moves) > 0
+
+
+def test_capacity_weighted_converges_to_capacity_shares(keys):
+    """On a static heterogeneous cluster the weighted engine re-homes
+    VWs until ownership ≈ capacity shares — within a few slots, not one
+    VW per slot."""
+    n, alpha = 10, 20
+    caps = _caps(n, 3, 5.0)
+    cfg = cg.CGConfig(n_workers=n, alpha=alpha, eps=0.01, slot_len=10_000,
+                      capacity_weighted=True, rate_decay=0.6,
+                      fcfs_pairing=True, max_moves_per_slot=16)
+    res = cg.run(cfg, keys[:100_000], caps)    # 10 slots
+    counts = np.bincount(np.asarray(res.state.vw_owner), minlength=n)
+    share = np.asarray(caps) / float(np.asarray(caps).sum())
+    np.testing.assert_allclose(counts, share * n * alpha, atol=2.5)
+    # uniform pairing cannot have moved enough VWs by then: ideal needs
+    # ~3*(45-20)=75 rebalancing moves, one-per-pair does ≤3/slot here
+    res_u = cg.run(cfg._replace(capacity_weighted=False, rate_decay=1.0,
+                                fcfs_pairing=False), keys[:100_000], caps)
+    counts_u = np.bincount(np.asarray(res_u.state.vw_owner), minlength=n)
+    err_w = np.abs(counts - share * n * alpha).max()
+    err_u = np.abs(counts_u - share * n * alpha).max()
+    assert err_w < err_u, (err_w, err_u)
+
+
+def test_capacity_weighted_tracks_time_varying_capacity(keys):
+    """Fig 12/13 shape: capacities change at ⅓ and ⅔; the windowed-rate
+    weighted engine re-converges after each change and settles below
+    the post-change spike."""
+    n = 10
+    slot = 4000
+    slots = M // slot
+    sched = streams.dynamic_capacity_schedule(n, M)
+    caps = np.zeros((slots, n))
+    for start, c in sched:
+        caps[start // slot:] = c / 0.8
+    cfg = cg.CGConfig(n_workers=n, alpha=20, eps=0.01, slot_len=slot,
+                      max_moves_per_slot=16, capacity_weighted=True,
+                      rate_decay=0.6, fcfs_pairing=True)
+    res = cg.run(cfg, keys, jnp.asarray(caps, jnp.float32))
+    imb = np.asarray(res.imbalance)
+    third = slots // 3
+    spike = np.mean(imb[2 * third: 2 * third + 3])
+    settled = np.mean(imb[-3:])
+    assert settled < spike, (spike, settled)
+    # and it must also beat the uniform (seed) pairing's settled level
+    res_u = cg.run(cfg._replace(capacity_weighted=False, rate_decay=1.0,
+                                fcfs_pairing=False),
+                   keys, jnp.asarray(caps, jnp.float32))
+    settled_u = np.mean(np.asarray(res_u.imbalance)[-3:])
+    assert settled < settled_u, (settled, settled_u)

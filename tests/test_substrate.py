@@ -131,6 +131,33 @@ def test_balancer_pairs_busy_idle():
     assert len(pipe.shards_of(0)) == 7 and len(pipe.shards_of(3)) == 9
 
 
+def test_balancer_fcfs_carryover():
+    """A busy host the per-slot move budget could not serve keeps its
+    queue position (shared delegation engine FCFS): it is paired next
+    slot ahead of newer signals."""
+    from repro.runtime import StragglerConfig
+    cfg = PipelineConfig(vocab=10, seq_len=4, global_batch=8, n_hosts=4)
+    pipe = ShardedTokenPipeline(cfg)
+    bal = DelegationBalancer(4, StragglerConfig(max_moves_per_slot=1))
+    for _ in range(8):
+        bal.observe(0, 3.0)     # worst straggler
+        bal.observe(1, 2.0)     # straggler too
+        bal.observe(2, 1.0)
+        bal.observe(3, 0.5)     # fast
+    assert bal.rebalance(pipe) == [(0, 3)]   # budget 1: host 1 carried
+    # next slot: host 0 recovered, host 1 unchanged — the carried host 1
+    # is served even though its signal is a slot old, and pairs with
+    # host 2, which also carried over from the slot-1 idle queue (its
+    # relative slowdown put it under θ_i×median then)
+    for _ in range(8):
+        bal.observe(0, 1.0)
+        bal.observe(1, 2.0)
+        bal.observe(2, 1.0)
+        bal.observe(3, 0.5)
+    assert bal.rebalance(pipe) == [(1, 2)]
+    assert bal.moves == [(0, 3), (1, 2)]
+
+
 def test_failure_repairs_shards(tmp_path):
     cfg = PipelineConfig(vocab=10, seq_len=4, global_batch=8, n_hosts=3)
     pipe = ShardedTokenPipeline(cfg)
