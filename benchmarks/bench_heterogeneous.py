@@ -13,8 +13,15 @@ paper's heterogeneity scenarios:
 * **deployment** (Fig 15): 24 workers, two cpulimit'ed to 30%, fixed
   per-message cost; the CI **gate** lives here — CG mean latency must
   be ≤ ⅓ of KG's — together with the uniform-capacity **parity** gate:
-  the engine with capacity weighting off must reproduce the seed's
-  one-VW-per-pair ``_paired_moves`` bit-for-bit.
+  the engine with capacity weighting off must reproduce the seed
+  pairing reference (``delegation.seed_pairing_reference``) bit-for-bit.
+* **flash crowd**: the hot key set shifts identity mid-run; the
+  adaptive queue-depth move budget (``adaptive_moves=True``) must
+  settle in no more slots than the best static M ∈ {2, 8, 32} while
+  hysteresis keeps the signal flap count ≤ ⅓ of the no-hysteresis run.
+* **Fig 12 granularity**: at α=10 the per-worker ideal VW count of a
+  1×-vs-5× mix sits on the busy/idle integer boundary and the raw
+  signals ping-pong; the hysteresis run must flap ≤ ⅓ as often.
 """
 from __future__ import annotations
 
@@ -22,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cg, delegation, partitioners as P, simulation, streams
+from repro.core import (cg, controller, delegation, partitioners as P,
+                        simulation, streams)
 
 from .common import fmt, record, table, wp_keys
 
@@ -173,6 +181,95 @@ def _fig15_deployment(m: int) -> float:
     return ratio, thr
 
 
+def _settle_slots(imb: np.ndarray, tau: float = 0.18, win: int = 3) -> int:
+    """Slots until the rolling-``win`` mean imbalance first dips below
+    ``tau`` (len(imb) if it never does)."""
+    for k in range(len(imb) - win + 1):
+        if float(imb[k: k + win].mean()) <= tau:
+            return k
+    return len(imb)
+
+
+def _flash_crowd(m: int) -> tuple[int, int, float, float]:
+    """Flash crowd: the hot key set shifts identity at m/2. Adaptive
+    queue-depth budgets must re-converge in no more slots than the best
+    static M without overshooting (fewer total moves than the largest
+    static budget), and hysteresis must cut signal flaps to ≤ ⅓."""
+    keys = wp_keys(m)
+    half = m // 2
+    keys = jnp.concatenate(
+        [keys[:half], (keys[half:] + 50_000) % streams.WP_TRACE.n_keys])
+    caps = jnp.asarray(streams.heterogeneous_capacities(N, 3, 5.0) / 0.8,
+                       jnp.float32)
+    shift_slot = half // SLOT
+    base = dict(n_workers=N, alpha=20, eps=0.01, slot_len=SLOT,
+                **CG_WEIGHTED)
+
+    cfgs = {f"static M={M}": cg.CGConfig(max_moves_per_slot=M, **base)
+            for M in (2, 8, 32)}
+    cfgs["adaptive"] = cg.CGConfig(max_moves_per_slot=32,
+                                   adaptive_moves=True, hysteresis=True,
+                                   **base)
+    cfgs["adaptive (no hyst)"] = cg.CGConfig(max_moves_per_slot=32,
+                                             adaptive_moves=True, **base)
+    rows, settles, flaps, moves = [], {}, {}, {}
+    for name, cfgv in cfgs.items():
+        res = cg.run(cfgv, keys, caps)
+        post = np.asarray(res.imbalance)[shift_slot:]
+        tel = res.telemetry
+        settles[name] = _settle_slots(post)
+        flaps[name] = int(np.asarray(tel.flaps).sum())
+        moves[name] = int(res.moves)
+        peak_budget = int(np.asarray(tel.budget)[shift_slot:].max())
+        record("heterogeneous", section="flash_crowd", scheme=name,
+               settle_slots=settles[name], post_mean_imbalance=float(
+                   post.mean()), moves=int(res.moves), flaps=flaps[name],
+               peak_budget=peak_budget)
+        rows.append([name, settles[name], fmt(float(post.mean()), 3),
+                     int(res.moves), flaps[name], peak_budget])
+    print(table("Flash crowd — hot-key shift at m/2 (slots to settle "
+                "below imb 0.18 / post-shift mean / moves / flaps)",
+                ["scheme", "settle", "post imb", "moves", "flaps",
+                 "peak budget"], rows))
+    best_static = min(v for k, v in settles.items() if k.startswith("static"))
+    flap_ratio = flaps["adaptive"] / max(flaps["adaptive (no hyst)"], 1)
+    moves_ratio = moves["adaptive"] / max(moves["static M=32"], 1)
+    print(f"gate: adaptive settles in {settles['adaptive']} slots vs best "
+          f"static {best_static}; hysteresis flap ratio {flap_ratio:.2f}; "
+          f"moves vs static M=32 {moves_ratio:.2f} "
+          f"(targets: ≤ best static, ≤ 0.33, ≤ 1.0)")
+    return settles["adaptive"], best_static, flap_ratio, moves_ratio
+
+
+def _fig12_alpha10_flaps(m: int) -> float:
+    """Fig 12 granularity effect: at α=10 a 1×-vs-5× mix puts the
+    per-worker ideal VW count on the busy/idle integer boundary and the
+    raw signals ping-pong every slot; hysteresis (enter/exit levels +
+    dwell) must cut the flap count to ≤ ⅓ at no settled-imbalance
+    cost."""
+    keys = wp_keys(m)
+    caps = jnp.asarray(streams.heterogeneous_capacities(N, 3, 5.0) / 0.8,
+                       jnp.float32)
+    base = dict(n_workers=N, alpha=10, eps=0.01, slot_len=SLOT,
+                max_moves_per_slot=16, **CG_WEIGHTED)
+    rows, flaps = [], {}
+    for name, hyst in (("no hysteresis", False), ("hysteresis", True)):
+        res = cg.run(cg.CGConfig(hysteresis=hyst, **base), keys, caps)
+        imb = np.asarray(res.imbalance)
+        flaps[name] = int(np.asarray(res.telemetry.flaps).sum())
+        record("heterogeneous", section="fig12_alpha10_flaps", scheme=name,
+               flaps=flaps[name], settled_imbalance=float(imb[-5:].mean()),
+               moves=int(res.moves))
+        rows.append([name, flaps[name], fmt(float(imb[-5:].mean()), 3),
+                     int(res.moves)])
+    print(table("Fig 12 — α=10 granularity boundary (1×-vs-5× mix): "
+                "signal flaps / settled imbalance / moves",
+                ["config", "flaps", "settled imb", "moves"], rows))
+    ratio = flaps["hysteresis"] / max(flaps["no hysteresis"], 1)
+    print(f"gate: flap ratio {ratio:.2f} (target ≤ 0.33)")
+    return ratio
+
+
 def _parity_gate(trials: int = 50) -> bool:
     """Uniform-capacity engine ≡ seed pairing, bit-for-bit, on random
     scenarios (every busy worker owning ≥ 1 VW — the configuration in
@@ -200,6 +297,20 @@ def _parity_gate(trials: int = 50) -> bool:
             return False
         if int(moved) != exp_done:
             return False
+        # the adaptive controller with both knobs off must degrade to
+        # exactly this path: raw threshold masks, static budget
+        ccfg = controller.ControllerConfig(n_workers=n, max_moves=M)
+        _, busy, idle, budget = controller.controller_step(
+            ccfg, controller.init_controller(ccfg), jnp.asarray(util),
+            jnp.asarray(util), 1.0, 0.85, 0.80, 0.75, 0.80)
+        st2 = delegation.init_state(dcfg, vw_owner=jnp.asarray(owner))
+        st2, moved2 = delegation.rebalance_step(
+            dcfg, st2, jnp.asarray(util), busy, idle, jnp.asarray(load),
+            jnp.ones(n, jnp.float32), budget)
+        if not (np.asarray(st2.vw_owner) == exp_owner).all():
+            return False
+        if int(moved2) != exp_done:
+            return False
     return True
 
 
@@ -209,12 +320,30 @@ def run(m: int = 300_000, quick: bool = False):
     _fig9_10_static(m)
     _fig12_13_dynamic(m)
     ratio, thr = _fig15_deployment(100_000 if quick else 200_000)
+    (settle_adaptive, settle_static, flash_flap_ratio,
+     flash_moves_ratio) = _flash_crowd(m)
+    alpha10_flap_ratio = _fig12_alpha10_flaps(m)
     parity = _parity_gate()
     assert parity, "uniform-capacity engine diverged from the seed pairing"
+    assert settle_adaptive <= settle_static, (
+        f"adaptive budget settled in {settle_adaptive} slots, slower than "
+        f"the best static budget ({settle_static})")
+    assert flash_flap_ratio <= 1 / 3, (
+        f"flash-crowd hysteresis flap ratio {flash_flap_ratio:.2f} > 1/3")
+    assert flash_moves_ratio <= 1.0, (
+        f"adaptive budget overshot: {flash_moves_ratio:.2f}x the moves of "
+        f"the largest static budget")
+    assert alpha10_flap_ratio <= 1 / 3, (
+        f"alpha=10 hysteresis flap ratio {alpha10_flap_ratio:.2f} > 1/3")
     record("heterogeneous", section="gate", kg_over_cg_mean_latency=ratio,
-           cg_over_kg_throughput=thr, parity=parity)
-    print(f"parity gate: uniform-capacity engine ≡ seed pairing over 50 "
-          f"random scenarios: {parity}")
+           cg_over_kg_throughput=thr, parity=parity,
+           settle_adaptive=settle_adaptive, settle_best_static=settle_static,
+           flash_flap_ratio=flash_flap_ratio,
+           flash_moves_ratio=flash_moves_ratio,
+           alpha10_flap_ratio=alpha10_flap_ratio)
+    print(f"parity gate: uniform-capacity engine (and the controller with "
+          f"both knobs off) ≡ seed pairing over 50 random scenarios: "
+          f"{parity}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,9 @@ _METRICS = {
     "mean_latency_ms", "max_latency_ms", "mean_latency", "queue_spread",
     "moves", "spike_imbalance", "settled_imbalance",
     "kg_over_cg_mean_latency", "cg_over_kg_throughput", "parity",
+    "settle_slots", "post_mean_imbalance", "flaps", "peak_budget",
+    "settle_adaptive", "settle_best_static", "flash_flap_ratio",
+    "flash_moves_ratio", "alpha10_flap_ratio",
 }
 
 

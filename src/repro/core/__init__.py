@@ -1,6 +1,6 @@
 """Paper core: partitioners, Consistent Grouping runtime, simulation."""
-from . import (cg, delegation, hashing, metrics, partitioners,  # noqa: F401
-               simulation, streams)
+from . import (cg, controller, delegation, hashing, metrics,  # noqa: F401
+               partitioners, simulation, streams)
 
-__all__ = ["cg", "delegation", "hashing", "metrics", "partitioners",
-           "simulation", "streams"]
+__all__ = ["cg", "controller", "delegation", "hashing", "metrics",
+           "partitioners", "simulation", "streams"]

@@ -28,6 +28,13 @@ Model fidelity notes
   VWs per slot as its rate surplus over its capacity-proportional
   share instead of one per signal. Routing changes affect only
   *future* messages — no message migration (§V-C).
+* **Adaptive control** (``adaptive_moves``/``hysteresis``): the
+  ``repro.core.controller`` layer can derive the per-slot move budget
+  from EWMA'd worker queue depths (clamped to
+  ``[min_moves, max_moves_per_slot]``) and latch the busy/idle signals
+  between separate enter/exit levels with a dwell, damping the Fig-12
+  integer ping-pong at the α-granularity boundary. Both default off —
+  the defaults stay bit-identical to the seed engine.
 * **Queues**: each worker drains ``c_w·slot_len`` messages per slot from
   an unbounded FIFO — the queueing model of §IV used for Fig 9/10/12/13.
 * **Block-parallel routing** (``block_size``): the paper defines PoRC
@@ -53,7 +60,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import delegation
+from . import controller, delegation
 from .hashing import hash_to_bins
 
 
@@ -82,6 +89,21 @@ class CGConfig(NamedTuple):
                                   # cumulative-since-t0 (seed-exact)
     fcfs_pairing: bool = False    # carry unserved busy/idle signals
                                   # across slots (the paper's queues)
+    adaptive_moves: bool = False  # per-slot move budget derived from
+                                  # queue depth (repro.core.controller),
+                                  # clamped [min_moves, max_moves_per_slot]
+                                  # (False = static budget, seed-exact)
+    min_moves: int = 1            # adaptive budget floor at equilibrium
+    depth_decay: float = 0.5      # EWMA decay of worker queue depths
+                                  # feeding the adaptive budget
+    hysteresis: bool = False      # latch busy/idle between separate
+                                  # enter/exit levels + dwell (damps the
+                                  # Fig-12 α-granularity ping-pong)
+    theta_margin: float = 0.05    # exit-level offset: busy exits below
+                                  # theta_busy-margin, idle exits above
+                                  # theta_idle+margin
+    dwell: int = 3                # slots a raw signal must persist
+                                  # before it latches
 
 
 class CGState(NamedTuple):
@@ -96,6 +118,16 @@ class CGState(NamedTuple):
                              #      kept in [0, V) so it never loses
                              #      precision, unlike the f32 t_offset)
     moves: jnp.ndarray       # []   cumulative paired moves
+    controller: controller.ControllerState   # adaptive-budget EWMA,
+                             # signal latches/dwell counters, flap count
+
+
+class DelegationTelemetry(NamedTuple):
+    """Per-slot controller/engine telemetry (benchmarks consume this)."""
+    budget: jnp.ndarray       # [slots] move budget the controller set
+    executed: jnp.ndarray     # [slots] paired moves actually executed
+    flaps: jnp.ndarray        # [slots] busy/idle signal flips this slot
+    queue_depth: jnp.ndarray  # [slots, n] worker FIFO depth at slot end
 
 
 class CGResult(NamedTuple):
@@ -107,6 +139,7 @@ class CGResult(NamedTuple):
     mean_latency: jnp.ndarray      # [slots] arrival-weighted mean latency
     utilization: jnp.ndarray       # [slots, n] per-worker utilization
     moves: jnp.ndarray             # [] total VW migrations
+    telemetry: DelegationTelemetry  # per-slot budget/moves/flaps/depths
     state: CGState
 
 
@@ -122,6 +155,7 @@ def init_state(cfg: CGConfig) -> CGState:
         t_offset=jnp.zeros((), jnp.float32),
         sg_ptr=jnp.zeros((), jnp.int32),
         moves=jnp.zeros((), jnp.int32),
+        controller=controller.init_controller(controller_config(cfg)),
     )
 
 
@@ -134,6 +168,18 @@ def delegation_config(cfg: CGConfig) -> delegation.DelegationConfig:
         capacity_weighted=cfg.capacity_weighted,
         rate_decay=cfg.rate_decay,
         fcfs=cfg.fcfs_pairing)
+
+
+def controller_config(cfg: CGConfig) -> controller.ControllerConfig:
+    """The adaptive-controller view of a CGConfig's knobs."""
+    return controller.ControllerConfig(
+        n_workers=cfg.n_workers,
+        adaptive_moves=cfg.adaptive_moves,
+        min_moves=cfg.min_moves,
+        max_moves=cfg.max_moves_per_slot,
+        depth_decay=cfg.depth_decay,
+        hysteresis=cfg.hysteresis,
+        dwell=cfg.dwell)
 
 
 def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
@@ -238,6 +284,9 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
         caps = capacities
     caps = caps.astype(jnp.float32)
     dcfg = delegation_config(cfg)
+    ccfg = controller_config(cfg)
+    # backlog one executed move drains per slot ≈ mean per-VW arrivals
+    move_unit = cfg.slot_len / max(cfg.n_workers * cfg.alpha, 1)
 
     def slot_step(state: CGState, xs):
         slot_keys, c = xs
@@ -259,6 +308,16 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
         imb = (jnp.max(norm_load) - jnp.mean(norm_load)) / jnp.maximum(
             jnp.mean(norm_load), 1e-9)
 
+        # the adaptive controller turns raw pressure into (possibly
+        # hysteresis-latched) busy/idle signals and this slot's move
+        # budget from the EWMA'd queue depths; with both knobs off the
+        # masks are the raw threshold comparisons and the budget is the
+        # static ceiling (bit-identical to the pre-controller engine).
+        cstate, busy, idle, budget = controller.controller_step(
+            ccfg, state.controller, util, q1, move_unit,
+            cfg.theta_busy, cfg.theta_busy - cfg.theta_margin,
+            cfg.theta_idle, cfg.theta_idle + cfg.theta_margin)
+
         # worker delegation through the shared engine (§V-B pairing):
         # per-VW arrivals this slot feed the windowed rates; capacities
         # drive the capacity-proportional budgets when enabled.
@@ -267,9 +326,9 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
             vw_rate=state.vw_rate,
             queues=state.signal_queues,
             moves=state.moves)
-        dstate, _ = delegation.rebalance_step(
-            dcfg, dstate, util, util > cfg.theta_busy,
-            util < cfg.theta_idle, vw_load - state.vw_load, c)
+        dstate, n_done = delegation.rebalance_step(
+            dcfg, dstate, util, busy, idle, vw_load - state.vw_load, c,
+            budget if cfg.adaptive_moves else None)
 
         new_state = CGState(
             vw_load=vw_load,
@@ -280,13 +339,16 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
             t_offset=state.t_offset + cfg.slot_len,
             sg_ptr=(state.sg_ptr + cfg.slot_len) % (cfg.n_workers * cfg.alpha),
             moves=dstate.moves,
+            controller=cstate,
         )
         metrics = (workers, vw, imb, jnp.max(q1) - jnp.min(q1),
-                   jnp.max(lat) - jnp.min(lat), mean_lat, util)
+                   jnp.max(lat) - jnp.min(lat), mean_lat, util,
+                   budget, n_done, cstate.flaps - state.controller.flaps, q1)
         return new_state, metrics
 
     state0 = init_state(cfg) if state is None else state
-    state, (workers, vw, imb, qs, ls, ml, util) = jax.lax.scan(
+    state, (workers, vw, imb, qs, ls, ml, util,
+            budget, executed, flaps, depths) = jax.lax.scan(
         slot_step, state0, (keys, caps))
     return CGResult(
         assignment=workers.reshape(-1),
@@ -297,5 +359,7 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
         mean_latency=ml,
         utilization=util,
         moves=state.moves,
+        telemetry=DelegationTelemetry(budget=budget, executed=executed,
+                                      flaps=flaps, queue_depth=depths),
         state=state,
     )

@@ -35,7 +35,11 @@ Semantics
   pacing. Either way at most ``max_moves_per_slot`` moves execute per
   slot and **only executed moves** consume budget: a busy worker that
   owns no VWs is skipped (run-length zero in the schedule), it does not
-  burn the pair's slot like the seed ``cg._paired_moves`` did.
+  burn the pair's slot like the seed pairing reference did
+  (``seed_pairing_reference`` below preserves that quirk as the parity
+  specification). ``rebalance_step``/``plan_pairs`` also accept a
+  runtime ``budget`` below the static ceiling — the adaptive
+  queue-depth budgets of ``repro.core.controller``.
 * **Device residency.** The owner map, rates and queues are jnp arrays
   threaded through ``rebalance_step`` (fully jit-compiled); callers
   never loop over VWs on the host.
@@ -190,9 +194,10 @@ def _execute(cfg: DelegationConfig, vw_owner, vw_rate, src, dst, n_exec):
 
 def seed_pairing_reference(n, max_moves, vw_load, vw_owner, util,
                            theta_busy=0.85, theta_idle=0.75):
-    """NumPy reference of the seed ``cg._paired_moves`` semantics — the
-    specification the uniform-capacity engine is gated against (tests
-    and ``benchmarks/bench_heterogeneous``'s parity gate both use it).
+    """The seed pairing reference — a NumPy specification of the seed
+    simulator's pairing semantics, which the uniform-capacity engine is
+    gated against (tests and ``benchmarks/bench_heterogeneous``'s
+    parity gate both use it).
 
     One VW per busy/idle pair in severity order, the migrated VW is the
     busy worker's most loaded, and — deliberately preserved — a busy
@@ -216,7 +221,7 @@ def seed_pairing_reference(n, max_moves, vw_load, vw_owner, util,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
-               busy, idle):
+               busy, idle, budget=None):
     """Pairing-only entry point (no owner map): returns the (src, dst)
     move schedule with unit budgets, for callers that execute moves
     themselves (e.g. the straggler balancer moving pipeline shards).
@@ -226,6 +231,9 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
       pressure: [n] f32, higher = more overloaded (orders busy workers
         descending and idle workers ascending).
       busy/idle: [n] bool signal masks for this slot.
+      budget: optional i32 scalar — this slot's move budget (e.g. from
+        ``controller.controller_step``), clamped by
+        ``max_moves_per_slot``; None keeps the static budget.
 
     Returns (src [M] i32, dst [M] i32, n_pairs i32, new PairQueues);
     only the first ``n_pairs`` schedule entries are valid.
@@ -237,6 +245,8 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
     shed = (busy_since != NOT_QUEUED).astype(jnp.int32)
     absorb = (idle_since != NOT_QUEUED).astype(jnp.int32)
     src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    if budget is not None:
+        n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
     lt = jnp.arange(cfg.max_moves_per_slot, dtype=jnp.int32) < n_exec
     served_src = jnp.zeros((cfg.n_workers,), jnp.int32).at[src].add(
         lt.astype(jnp.int32))
@@ -250,7 +260,7 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
-                   busy, idle, vw_arrivals, capacities):
+                   busy, idle, vw_arrivals, capacities, budget=None):
     """One monitoring-slot tick of the full engine.
 
     Updates the windowed VW rates from this slot's arrivals, admits the
@@ -264,6 +274,11 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
       vw_arrivals: [V] f32 per-VW arrivals since the previous tick.
       capacities: [n] f32 service-rate estimates (any scale — only the
         shares matter); ignored unless ``cfg.capacity_weighted``.
+      budget: optional i32 scalar — this slot's move budget, typically
+        derived from queue depth by ``controller.controller_step``. The
+        static ``max_moves_per_slot`` stays the hard ceiling (schedule
+        arrays are sized by it); None keeps the static budget, which is
+        bit-identical to the pre-controller engine.
 
     Returns (new DelegationState, n_moved i32).
     """
@@ -281,6 +296,8 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
     shed, absorb = _budgets(cfg, owned_count, rate_w, in_busy, in_idle,
                             jnp.asarray(capacities, jnp.float32))
     src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    if budget is not None:
+        n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
     owner, n_done, served_src, served_dst = _execute(
         cfg, state.vw_owner, rate, src, dst, n_exec)
     # fully-served workers leave their queue; partially-served ones keep

@@ -27,7 +27,7 @@ class QueueSimResult(NamedTuple):
     queue_spread: jnp.ndarray    # [slots] max-min queue length
     latency_spread: jnp.ndarray  # [slots] max-min latency proxy
     mean_latency: jnp.ndarray    # [slots]
-    p_max_latency: jnp.ndarray   # [slots] latency at the slowest worker
+    max_latency: jnp.ndarray     # [slots] latency at the slowest worker
     imbalance: jnp.ndarray       # [slots] normalized-load imbalance
     utilization: jnp.ndarray     # [slots, n]
     throughput: jnp.ndarray      # [slots] messages drained per unit time
@@ -79,9 +79,8 @@ class DeploymentResult(NamedTuple):
     throughput: jnp.ndarray      # messages/second sustained
     mean_latency_ms: jnp.ndarray
     max_latency_ms: jnp.ndarray  # latency at the worst (slowest) worker
-                                 # — an upper bound on p99, not a
-                                 # percentile (there is no per-message
-                                 # distribution in this fluid model)
+                                 # (the fluid model has no per-message
+                                 # distribution, hence no percentiles)
 
 
 def simulate_deployment(assignment: jnp.ndarray, n_workers: int,

@@ -12,6 +12,12 @@ the serving router use): busy hosts pair with idle hosts in severity
 order, signals the move budget could not serve carry over FCFS to the
 next slot, and one pipeline shard (virtual worker) moves per pair;
 routing changes affect only future batches.
+
+``StragglerConfig.hysteresis``/``adaptive_moves`` opt into the shared
+adaptive controller (``repro.core.controller``): signals latch between
+separate enter/exit step-time ratios with a dwell (a host hovering at
+θ_b × median stops flapping), and the per-slot move budget follows the
+summed step-time excess instead of the static ``max_moves_per_slot``.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import delegation
+from repro.core import controller, delegation
 
 
 @dataclass
@@ -30,6 +36,17 @@ class StragglerConfig:
     theta_idle: float = 0.90     # step_time < θ_i × median → idle
     window: int = 8              # time slot t0, in steps
     max_moves_per_slot: int = 2
+    adaptive_moves: bool = False  # per-slot budget from the summed
+                                  # step-time excess over the fleet mean
+                                  # (repro.core.controller), clamped
+                                  # [min_moves, max_moves_per_slot]
+    min_moves: int = 1
+    depth_decay: float = 0.5     # EWMA decay of the step-time ratios
+    hysteresis: bool = False     # latch busy/idle between enter/exit
+                                  # ratio levels + dwell
+    exit_margin: float = 0.10    # busy exits below θ_b−margin × median,
+                                  # idle exits above θ_i+margin × median
+    dwell: int = 3               # slots a raw signal must persist
 
 
 @dataclass
@@ -46,6 +63,28 @@ class DelegationBalancer:
             max_moves_per_slot=self.cfg.max_moves_per_slot, fcfs=True)
         self._queues = delegation.init_queues(self.n_hosts)
         self.moves: list[tuple[int, int]] = []
+        # adaptive controller over the step-time/median ratio: busy
+        # enters above θ_b and exits below θ_b − margin (idle
+        # symmetric); the budget follows the summed ratio excess
+        if self.cfg.adaptive_moves or self.cfg.hysteresis:
+            c = self.cfg
+            self._controller = controller.DelegationController.from_thresholds(
+                controller.ControllerConfig(
+                    n_workers=self.n_hosts,
+                    adaptive_moves=c.adaptive_moves,
+                    min_moves=c.min_moves,
+                    max_moves=c.max_moves_per_slot,
+                    depth_decay=c.depth_decay,
+                    hysteresis=c.hysteresis, dwell=c.dwell),
+                theta_busy=c.theta_busy, theta_idle=c.theta_idle,
+                margin=c.exit_margin)
+        else:
+            self._controller = None
+
+    @property
+    def flap_count(self) -> int:
+        """Cumulative busy/idle signal flips (controller telemetry)."""
+        return self._controller.flaps if self._controller else 0
 
     def observe(self, host: int, step_time_s: float) -> None:
         self._hist[host].append(step_time_s)
@@ -73,16 +112,29 @@ class DelegationBalancer:
         """Pair busy→idle hosts (severity order, FCFS carry-over across
         slots, bounded per slot) and move one shard per pair.
         ``pipeline`` must expose move_shard()."""
-        busy, idle = self.signals()
         means = np.asarray(self._means(), np.float32)
-        busy_mask = np.zeros(self.n_hosts, bool)
-        busy_mask[busy] = True
-        idle_mask = np.zeros(self.n_hosts, bool)
-        idle_mask[idle] = True
         pressure = np.where(np.isfinite(means), means, 0.0)
+        budget = None
+        if self._controller is not None:
+            med = float(np.nanmedian(means))
+            if not np.isfinite(med) or med <= 0:
+                return []
+            # a host with no samples sits at ratio 1.0: neither busy
+            # nor idle, and it contributes no depth excess
+            ratio = np.where(np.isfinite(means), means / med, 1.0)
+            busy_j, idle_j, budget_j = self._controller.step(
+                ratio.astype(np.float32), ratio.astype(np.float32), 1.0)
+            busy_mask, idle_mask = np.asarray(busy_j), np.asarray(idle_j)
+            budget = budget_j if self.cfg.adaptive_moves else None
+        else:
+            busy, idle = self.signals()
+            busy_mask = np.zeros(self.n_hosts, bool)
+            busy_mask[busy] = True
+            idle_mask = np.zeros(self.n_hosts, bool)
+            idle_mask[idle] = True
         src, dst, n_pairs, self._queues = delegation.plan_pairs(
             self._dcfg, self._queues, jnp.asarray(pressure),
-            jnp.asarray(busy_mask), jnp.asarray(idle_mask))
+            jnp.asarray(busy_mask), jnp.asarray(idle_mask), budget)
         src, dst = np.asarray(src), np.asarray(dst)
         moved = []
         for j in range(int(n_pairs)):

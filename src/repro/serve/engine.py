@@ -19,7 +19,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import delegation
+from repro.core import controller, delegation
 from repro.core.hashing import hash_to_bins
 from repro.kernels.ref import (multisource_merge, multisource_state_init,
                                ref_porc_multisource)
@@ -54,6 +54,13 @@ class CGRequestRouter:
     pairing is severity-ordered with FCFS carry-over across rebalance
     ticks, and ``capacity_weighted=True`` sheds VWs from a slow replica
     until its share matches its measured capacity.
+
+    ``adaptive_moves``/``hysteresis`` add the closed-loop controller
+    (``repro.core.controller``): the per-tick move budget follows the
+    EWMA'd replica queue depths instead of the static
+    ``max_moves_per_rebalance``, and busy/idle signals latch between
+    separate enter/exit occupancy levels with a dwell so a replica
+    hovering at ``queue_hi`` stops flapping. See ``docs/tuning.md``.
     """
     n_replicas: int
     alpha: int = 8
@@ -69,6 +76,16 @@ class CGRequestRouter:
     rate_decay: float = 0.6       # EWMA decay of per-VW rates per
                                   # rebalance tick (1.0 = cumulative)
     max_moves_per_rebalance: int = 8
+    adaptive_moves: bool = False  # per-tick move budget from queue
+                                  # depth (repro.core.controller),
+                                  # clamped [min_moves, max_moves_per_rebalance]
+    min_moves: int = 1            # adaptive budget floor
+    depth_decay: float = 0.5      # EWMA decay of replica queue depths
+    hysteresis: bool = False      # latch busy/idle between enter/exit
+                                  # occupancy levels + dwell
+    queue_exit_margin: float = 0.1  # busy exits below queue_hi-margin,
+                                  # idle exits above queue_lo+margin
+    dwell: int = 3                # ticks a raw signal must persist
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
@@ -89,6 +106,37 @@ class CGRequestRouter:
         # no-candidate early return never strands a carried signal
         self._queued_busy = False
         self._queued_idle = False
+        # the adaptive controller (queue-depth budgets + hysteresis
+        # latches); None keeps the static-budget raw-signal path
+        if self.adaptive_moves or self.hysteresis:
+            self._controller = controller.DelegationController.from_thresholds(
+                controller.ControllerConfig(
+                    n_workers=self.n_replicas,
+                    adaptive_moves=self.adaptive_moves,
+                    min_moves=self.min_moves,
+                    max_moves=self.max_moves_per_rebalance,
+                    depth_decay=self.depth_decay,
+                    hysteresis=self.hysteresis, dwell=self.dwell),
+                theta_busy=self.queue_hi, theta_idle=self.queue_lo,
+                margin=self.queue_exit_margin)
+        else:
+            self._controller = None
+        self._rebalance_mark = 0    # routed count at the last rebalance
+
+    @property
+    def controller_active(self) -> bool:
+        return self._controller is not None
+
+    @property
+    def flap_count(self) -> int:
+        """Cumulative busy/idle signal flips (controller telemetry)."""
+        return self._controller.flaps if self._controller else 0
+
+    @property
+    def last_budget(self) -> int:
+        """The move budget the controller set at the last rebalance."""
+        return (self._controller.last_budget if self._controller
+                else self.max_moves_per_rebalance)
 
     @property
     def vw_owner(self) -> np.ndarray:
@@ -135,6 +183,9 @@ class CGRequestRouter:
     @routed.setter
     def routed(self, value) -> None:
         self._routed = int(value)
+        # the adaptive controller's traffic mark must never sit ahead of
+        # the clock (routed - mark would go negative after a restore)
+        self._rebalance_mark = min(self._rebalance_mark, self._routed)
         self._state = self._state._replace(routed=jnp.float32(self._routed))
 
     def _maybe_rebase(self) -> None:
@@ -150,6 +201,7 @@ class CGRequestRouter:
             return
         shift = float(jnp.min(self._state.base + self._state.delta.sum(0)))
         self._routed -= int(shift * self.n_virtual)
+        self._rebalance_mark -= int(shift * self.n_virtual)
         self._state = self._state._replace(
             base=self._state.base - shift,
             routed=jnp.float32(self._routed))
@@ -204,7 +256,7 @@ class CGRequestRouter:
                                    jnp.asarray(assign_vw)))
 
     def rebalance(self, busy: list[int], idle: list[int],
-                  pressure=None, capacities=None) -> int:
+                  pressure=None, capacities=None, depths=None) -> int:
         """Paired moves through the shared delegation engine.
 
         Busy replicas pair with idle ones in severity order (``pressure``
@@ -215,33 +267,69 @@ class CGRequestRouter:
         device-resident owner map, rates and queues — no per-VW host
         loop. ``capacities`` (any scale) drives capacity-proportional
         budgets when the router is ``capacity_weighted``.
+
+        With the adaptive controller on (``adaptive_moves`` or
+        ``hysteresis``) and ``pressure`` given, the busy/idle masks are
+        re-derived from the controller's latched signals (the raw lists
+        only matter as a legacy fallback) and the per-tick move budget
+        comes from the EWMA'd ``depths`` (queue lengths, in messages;
+        defaults to ``pressure · max_queue``), clamped to
+        ``[min_moves, max_moves_per_rebalance]``.
         """
-        # carried FCFS signals count as candidates: a busy replica left
-        # queued by an earlier budget must still pair when only the
-        # idle side shows up this tick (and vice versa)
-        if ((not len(busy) and not self._queued_busy)
-                or (not len(idle) and not self._queued_idle)):
-            return 0
         n = self.n_replicas
-        if pressure is None:
-            p = np.zeros(n, np.float32)
-            for j, b in enumerate(busy):
-                p[b] = 1e6 - j          # earlier in the list = more severe
-            for j, i in enumerate(idle):
-                p[i] = -1e6 + j         # earlier in the list = more idle
-        else:
+        budget = None
+        if self._controller is not None and pressure is None:
+            # silently falling back to the legacy path would strand the
+            # controller: latches/EWMA never tick, flap telemetry stays
+            # 0, and the routed-traffic mark drifts so a later adaptive
+            # budget is computed against an inflated unit
+            raise ValueError(
+                "adaptive_moves/hysteresis require rebalance(pressure=...)"
+                " (e.g. queue occupancy) so the controller can tick")
+        if self._controller is not None:
             p = np.asarray(pressure, np.float32)
-        busy_mask = np.zeros(n, bool)
-        busy_mask[list(busy)] = True
-        idle_mask = np.zeros(n, bool)
-        idle_mask[list(idle)] = True
+            # pressure on this router is occupancy (a fraction of
+            # max_queue — queue_hi/queue_lo compare against it), but the
+            # budget needs backlog in *message* units to match ``unit``;
+            # a raw-fraction fallback would pin the budget at min_moves
+            d = (p * self.max_queue if depths is None
+                 else np.asarray(depths, np.float32))
+            # one VW re-routes ~1/V of the traffic since the last tick
+            unit = max((self._routed - self._rebalance_mark)
+                       / max(self.n_virtual, 1), 1.0)
+            self._rebalance_mark = self._routed
+            busy_j, idle_j, budget_j = self._controller.step(p, d, unit)
+            busy_mask, idle_mask = np.asarray(busy_j), np.asarray(idle_j)
+            budget = budget_j if self.adaptive_moves else None
+            if (not busy_mask.any() and not self._queued_busy) or (
+                    not idle_mask.any() and not self._queued_idle):
+                return 0
+        else:
+            # carried FCFS signals count as candidates: a busy replica
+            # left queued by an earlier budget must still pair when only
+            # the idle side shows up this tick (and vice versa)
+            if ((not len(busy) and not self._queued_busy)
+                    or (not len(idle) and not self._queued_idle)):
+                return 0
+            if pressure is None:
+                p = np.zeros(n, np.float32)
+                for j, b in enumerate(busy):
+                    p[b] = 1e6 - j      # earlier in the list = more severe
+                for j, i in enumerate(idle):
+                    p[i] = -1e6 + j     # earlier in the list = more idle
+            else:
+                p = np.asarray(pressure, np.float32)
+            busy_mask = np.zeros(n, bool)
+            busy_mask[list(busy)] = True
+            idle_mask = np.zeros(n, bool)
+            idle_mask[list(idle)] = True
         load = self._state.base + self._state.delta.sum(0)   # device
         caps = (jnp.ones(n, jnp.float32) if capacities is None
                 else jnp.asarray(capacities, jnp.float32))
         self._dstate, moved = delegation.rebalance_step(
             self._dcfg, self._dstate, jnp.asarray(p),
             jnp.asarray(busy_mask), jnp.asarray(idle_mask),
-            load - self._rated_load, caps)
+            load - self._rated_load, caps, budget)
         self._rated_load = load
         q = self._dstate.queues
         self._queued_busy = bool(jnp.any(q.busy_since != delegation.NOT_QUEUED))
@@ -312,10 +400,13 @@ class ServingEngine:
             rep.idle_signal = occ < self.router.queue_lo
         busy = [i for i, r in enumerate(self.replicas) if r.busy_signal]
         idle = [i for i, r in enumerate(self.replicas) if r.idle_signal]
-        if busy or idle:    # the router pairs carried FCFS signals too
-            self.router.rebalance(busy, idle, pressure=occupancy,
-                                  capacities=np.maximum(
-                                      self.capacity_estimates, 1e-3))
+        # with the adaptive controller on, every tick must reach the
+        # router so the hysteresis latches and depth EWMA stay current
+        if busy or idle or self.router.controller_active:
+            self.router.rebalance(
+                busy, idle, pressure=occupancy,
+                capacities=np.maximum(self.capacity_estimates, 1e-3),
+                depths=np.asarray(self.queue_depths(), np.float32))
         return served
 
     def queue_depths(self) -> list[int]:

@@ -1,0 +1,337 @@
+"""The adaptive delegation controller (repro.core.controller):
+queue-depth move budgets, busy/idle hysteresis, static degradation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import stream_len
+
+from repro.core import cg, controller as C, delegation as D, streams
+
+M = stream_len(200_000, 100_000)
+
+
+def _step(cfg, st, pressure, depths, unit=1.0,
+          levels=(0.85, 0.80, 0.75, 0.80)):
+    return C.controller_step(cfg, st, jnp.asarray(pressure, jnp.float32),
+                             jnp.asarray(depths, jnp.float32), unit,
+                             *levels)
+
+
+# ---------------------------------------------------------------------------
+# adaptive budget
+# ---------------------------------------------------------------------------
+
+def test_budget_clamped_to_bounds_property():
+    """Property: the adaptive budget never leaves
+    [min_moves, max_moves], for any pressure/depth/unit stream."""
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        n = int(rng.integers(2, 16))
+        lo = int(rng.integers(1, 4))
+        hi = lo + int(rng.integers(0, 32))
+        cfg = C.ControllerConfig(n_workers=n, adaptive_moves=True,
+                                 min_moves=lo, max_moves=hi,
+                                 depth_decay=float(rng.random()),
+                                 hysteresis=bool(rng.integers(2)))
+        st = C.init_controller(cfg)
+        for _ in range(10):
+            scale = 10.0 ** rng.integers(-2, 6)
+            st, busy, idle, budget = _step(
+                cfg, st, rng.random(n) * 2, rng.random(n) * scale,
+                unit=float(10.0 ** rng.integers(-3, 3)))
+            assert lo <= int(budget) <= hi
+            assert not np.any(np.asarray(busy) & np.asarray(idle))
+
+
+def test_budget_follows_queue_depth():
+    cfg = C.ControllerConfig(n_workers=4, adaptive_moves=True,
+                             min_moves=1, max_moves=16, depth_decay=0.0)
+    st = C.init_controller(cfg)
+    # no backlog → floor
+    st, _, _, b = _step(cfg, st, np.zeros(4), np.zeros(4))
+    assert int(b) == 1
+    # uniform backlog: no worker is above the fleet mean → floor
+    st, _, _, b = _step(cfg, st, np.zeros(4), np.full(4, 100.0))
+    assert int(b) == 1
+    # one worker 8 units above the mean → ceil(excess/unit) moves
+    st, _, _, b = _step(cfg, st, np.zeros(4), np.array([8.0, 0, 0, 0]))
+    assert int(b) == 6            # excess = 8 - 2 = 6, unit = 1
+    # huge skewed backlog → ceiling
+    st, _, _, b = _step(cfg, st, np.zeros(4), np.array([1e5, 0, 0, 0]))
+    assert int(b) == 16
+
+
+def test_budget_ewma_smooths_spikes():
+    """depth_decay keeps one noisy slot from slamming the budget open
+    and lets it decay back over ≈1/(1-decay) slots."""
+    cfg = C.ControllerConfig(n_workers=2, adaptive_moves=True,
+                             min_moves=1, max_moves=32, depth_decay=0.5)
+    st = C.init_controller(cfg)
+    st, _, _, b0 = _step(cfg, st, np.zeros(2), np.array([40.0, 0.0]))
+    st, _, _, b1 = _step(cfg, st, np.zeros(2), np.zeros(2))
+    st, _, _, b2 = _step(cfg, st, np.zeros(2), np.zeros(2))
+    assert int(b0) == 10          # (1-decay)·20 excess
+    assert int(b1) == 5 and int(b2) == 3      # decaying, not pinned
+    assert int(b0) < 20           # EWMA halves the instantaneous excess
+
+
+def test_rebalance_respects_runtime_budget():
+    """The engine executes at most ``budget`` moves even when the
+    static ceiling and the eligible pairs allow more."""
+    n, a = 4, 8
+    V = n * a
+    owner = np.repeat(np.arange(n), a).astype(np.int32)
+    util = np.array([2.0, 0.5, 0.5, 0.5], np.float32)
+    dcfg = D.DelegationConfig(n_workers=n, n_virtual=V,
+                              max_moves_per_slot=8, capacity_weighted=True)
+    caps = np.array([0.3, 1.0, 1.0, 1.0], np.float32)
+    st = D.init_state(dcfg, vw_owner=jnp.asarray(owner))
+    _, moved_free = D.rebalance_step(
+        dcfg, st, jnp.asarray(util), jnp.asarray(util > 0.85),
+        jnp.asarray(util < 0.75), jnp.ones(V, jnp.float32),
+        jnp.asarray(caps))
+    assert int(moved_free) > 2    # capacity-weighted budget wants several
+    st2 = D.init_state(dcfg, vw_owner=jnp.asarray(owner))
+    _, moved_capped = D.rebalance_step(
+        dcfg, st2, jnp.asarray(util), jnp.asarray(util > 0.85),
+        jnp.asarray(util < 0.75), jnp.ones(V, jnp.float32),
+        jnp.asarray(caps), jnp.int32(2))
+    assert int(moved_capped) == 2
+
+
+def test_static_mode_bit_identical_to_raw_path():
+    """With both knobs off the controller degrades to the static
+    engine exactly: raw threshold masks, budget == max_moves — the
+    seed-parity argument extended through the controller."""
+    rng = np.random.default_rng(5)
+    for _ in range(25):
+        n = int(rng.integers(2, 10))
+        a = int(rng.integers(1, 5))
+        V, mmax = n * a, int(rng.integers(1, 9))
+        owner = np.repeat(np.arange(n), a).astype(np.int32)
+        rng.shuffle(owner)
+        load = (rng.random(V) * 50).astype(np.float32)
+        util = (rng.random(n) * 1.6).astype(np.float32)
+        ccfg = C.ControllerConfig(n_workers=n, max_moves=mmax)
+        _, busy, idle, budget = _step(ccfg, C.init_controller(ccfg),
+                                      util, util)
+        np.testing.assert_array_equal(np.asarray(busy), util > 0.85)
+        np.testing.assert_array_equal(np.asarray(idle), util < 0.75)
+        assert int(budget) == mmax
+        dcfg = D.DelegationConfig(n_workers=n, n_virtual=V,
+                                  max_moves_per_slot=mmax)
+        st_a = D.init_state(dcfg, vw_owner=jnp.asarray(owner))
+        st_a, moved_a = D.rebalance_step(
+            dcfg, st_a, jnp.asarray(util), jnp.asarray(util > 0.85),
+            jnp.asarray(util < 0.75), jnp.asarray(load),
+            jnp.ones(n, jnp.float32))
+        st_b = D.init_state(dcfg, vw_owner=jnp.asarray(owner))
+        st_b, moved_b = D.rebalance_step(
+            dcfg, st_b, jnp.asarray(util), busy, idle, jnp.asarray(load),
+            jnp.ones(n, jnp.float32), budget)
+        np.testing.assert_array_equal(np.asarray(st_a.vw_owner),
+                                      np.asarray(st_b.vw_owner))
+        assert int(moved_a) == int(moved_b)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis
+# ---------------------------------------------------------------------------
+
+def test_dwell_delays_entry():
+    cfg = C.ControllerConfig(n_workers=1, hysteresis=True, dwell=3)
+    st = C.init_controller(cfg)
+    hot = np.array([0.9], np.float32)
+    for k in range(2):
+        st, busy, _, _ = _step(cfg, st, hot, hot)
+        assert not bool(busy[0]), f"latched after {k+1} < dwell slots"
+    st, busy, _, _ = _step(cfg, st, hot, hot)
+    assert bool(busy[0])
+    # one cool slot resets the dwell counter
+    st, busy, _, _ = _step(cfg, st, np.array([0.5], np.float32), hot)
+    st, busy, _, _ = _step(cfg, st, hot, hot)
+    assert not bool(busy[0])
+
+
+def test_exit_level_latches_between_thresholds():
+    """Busy enters above 0.85, exits only below 0.80: a worker
+    oscillating in (0.80, 0.85) stays latched instead of flapping."""
+    cfg = C.ControllerConfig(n_workers=1, hysteresis=True, dwell=1)
+    st = C.init_controller(cfg)
+    st, busy, _, _ = _step(cfg, st, np.array([0.9]), np.zeros(1))
+    assert bool(busy[0])
+    for p in (0.84, 0.81, 0.83, 0.84):
+        st, busy, _, _ = _step(cfg, st, np.array([p]), np.zeros(1))
+        assert bool(busy[0]), f"unlatched at pressure {p} > exit 0.80"
+    st, busy, _, _ = _step(cfg, st, np.array([0.79]), np.zeros(1))
+    assert not bool(busy[0])
+    assert int(st.flaps) == 2     # one enter + one exit, not 6
+
+
+def test_no_hysteresis_flaps_at_boundary():
+    """The same oscillation without hysteresis flips every slot — the
+    flap counter shows the raw ping-pong the latches remove."""
+    cfg = C.ControllerConfig(n_workers=1, hysteresis=False)
+    st = C.init_controller(cfg)
+    for p in (0.9, 0.8, 0.9, 0.8, 0.9, 0.8):
+        st, _, _, _ = _step(cfg, st, np.array([p]), np.zeros(1))
+    assert int(st.flaps) == 6
+
+
+def test_cg_alpha10_hysteresis_regression():
+    """The Fig-12 granularity scenario: α=10 on a 1×-vs-5× mix puts
+    the ideal VW count on the busy/idle integer boundary. With
+    hysteresis the signal flap count must drop to ≤ ⅓ of the raw run
+    while settling no worse (regression for the ping-pong fix)."""
+    keys = streams.sample_trace(jax.random.PRNGKey(0), streams.WP_TRACE, M)
+    caps = jnp.asarray(streams.heterogeneous_capacities(10, 3, 5.0) / 0.8,
+                       jnp.float32)
+    base = dict(n_workers=10, alpha=10, eps=0.01, slot_len=5_000,
+                max_moves_per_slot=16, capacity_weighted=True,
+                rate_decay=0.6, fcfs_pairing=True)
+    flaps, settled = {}, {}
+    for hyst in (False, True):
+        res = cg.run(cg.CGConfig(hysteresis=hyst, **base), keys, caps)
+        flaps[hyst] = int(np.asarray(res.telemetry.flaps).sum())
+        settled[hyst] = float(np.asarray(res.imbalance)[-5:].mean())
+    assert flaps[False] >= 3 * flaps[True], (
+        f"hysteresis flaps {flaps[True]} not ≤ 1/3 of raw {flaps[False]}")
+    assert settled[True] <= settled[False] * 1.5, (
+        f"hysteresis settled imbalance degraded: {settled}")
+
+
+# ---------------------------------------------------------------------------
+# cg-level telemetry + adaptive budget
+# ---------------------------------------------------------------------------
+
+def test_cg_adaptive_budget_bounded_and_telemetry():
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(1), 60_000,
+                                      5_000, 1.2)
+    caps = jnp.asarray(streams.heterogeneous_capacities(8, 2, 4.0) / 0.8,
+                       jnp.float32)
+    cfg = cg.CGConfig(n_workers=8, alpha=10, eps=0.01, slot_len=5_000,
+                      max_moves_per_slot=12, adaptive_moves=True,
+                      min_moves=2, hysteresis=True, capacity_weighted=True,
+                      rate_decay=0.6, fcfs_pairing=True)
+    res = cg.run(cfg, keys, caps)
+    tel = res.telemetry
+    budget = np.asarray(tel.budget)
+    executed = np.asarray(tel.executed)
+    assert budget.shape == executed.shape == (12,)
+    assert (budget >= 2).all() and (budget <= 12).all()
+    assert (executed <= budget).all()
+    assert int(np.asarray(tel.executed).sum()) == int(res.moves)
+    assert np.asarray(tel.queue_depth).shape == (12, 8)
+    assert (np.asarray(tel.flaps) >= 0).all()
+
+
+def test_cg_default_telemetry_static_budget():
+    """With the controller off the telemetry still records: budget is
+    pinned at the static ceiling and flaps count the raw signals."""
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(1), 30_000,
+                                      5_000, 1.2)
+    caps = jnp.ones(5, jnp.float32) / 4.0
+    res = cg.run(cg.CGConfig(n_workers=5, alpha=10, slot_len=5_000,
+                             max_moves_per_slot=7), keys, caps)
+    assert (np.asarray(res.telemetry.budget) == 7).all()
+
+
+# ---------------------------------------------------------------------------
+# serve + straggler integration
+# ---------------------------------------------------------------------------
+
+def test_serve_adaptive_router_rebalances_and_bounds_budget():
+    from repro.serve.engine import CGRequestRouter
+    rng = np.random.default_rng(2)
+    r = CGRequestRouter(n_replicas=6, alpha=8, capacity_weighted=True,
+                        adaptive_moves=True, hysteresis=True, dwell=2,
+                        max_moves_per_rebalance=6)
+    assert r.controller_active
+    for _ in range(12):
+        r.route_batch(rng.integers(0, 500, 256).astype(np.int32))
+        occ = rng.random(6).astype(np.float32)
+        occ[0] = 0.95                    # replica 0 persistently hot
+        occ[1:] = occ[1:] * 0.3          # the rest idle
+        depths = occ * 256
+        r.rebalance([], [], pressure=occ, depths=depths,
+                    capacities=np.ones(6))
+        assert 1 <= r.last_budget <= 6
+    counts = np.bincount(r.vw_owner, minlength=6)
+    assert counts.sum() == 48            # population conserved
+    assert counts[0] < 8                 # the hot replica shed VWs
+    assert r.moves > 0
+    assert r.flap_count >= 2             # enter events are counted
+
+
+def test_serve_engine_ticks_controller_every_step():
+    from repro.serve.engine import CGRequestRouter, ServingEngine
+    calls = []
+    eng = ServingEngine([lambda b: calls.append(len(b)) for _ in range(3)],
+                        router=CGRequestRouter(n_replicas=3, alpha=4,
+                                               hysteresis=True),
+                        max_batch=4)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        eng.submit_batch(rng.integers(0, 50, 16).astype(np.int32),
+                         [None] * 16)
+        eng.step()
+    # the controller saw every tick even when no raw signal fired
+    assert int(eng.router._controller.state.flaps) >= 0
+    assert sum(eng.queue_depths()) >= 0
+
+
+def test_straggler_hysteresis_stops_boundary_flapping():
+    from repro.runtime.straggler import DelegationBalancer, StragglerConfig
+
+    class _Pipe:
+        def __init__(self):
+            self.moved = []
+
+        def move_shard(self, src, dst):
+            self.moved.append((src, dst))
+            return len(self.moved)
+
+    def drive(cfg):
+        bal = DelegationBalancer(n_hosts=4, cfg=cfg)
+        pipe = _Pipe()
+        rng = np.random.default_rng(3)
+        for t in range(24):
+            # host 0 oscillates just across the busy threshold while
+            # host 3 is genuinely idle; hosts 1-2 sit at the median
+            wobble = 1.20 if t % 2 == 0 else 1.10
+            for h, s in enumerate([wobble, 1.0, 1.0, 0.7]):
+                bal.observe(h, s + rng.normal(0, 1e-3))
+            bal.rebalance(pipe)
+        return bal
+
+    flappy = drive(StragglerConfig(window=1))
+    calm = drive(StragglerConfig(window=1, hysteresis=True, dwell=2))
+    # the raw signals pair the wobbling host every other slot; the
+    # dwell filter sees it never stays busy two slots running and
+    # suppresses the churn entirely
+    assert len(flappy.moves) >= 8
+    assert len(calm.moves) <= 2
+    assert calm.flap_count <= 4
+
+
+def test_straggler_adaptive_budget_scales_with_excess():
+    from repro.runtime.straggler import DelegationBalancer, StragglerConfig
+
+    class _Pipe:
+        def move_shard(self, src, dst):
+            return 1
+
+    bal = DelegationBalancer(
+        n_hosts=6, cfg=StragglerConfig(window=1, adaptive_moves=True,
+                                       hysteresis=True, dwell=1,
+                                       max_moves_per_slot=4))
+    pipe = _Pipe()
+    for _ in range(3):
+        for h, s in enumerate([4.0, 1.0, 1.0, 1.0, 0.5, 0.5]):
+            bal.observe(h, s)
+        bal.rebalance(pipe)
+    # straggler at 4x the median: the summed ratio excess opens the
+    # budget past one move per slot but never past the ceiling
+    assert 1 <= bal._controller.last_budget <= 4
+    assert bal._controller.last_budget > 1

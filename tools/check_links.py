@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in the repo's markdown docs.
+
+Scans README.md, ROADMAP.md and everything under docs/ for markdown
+links/images ``[text](target)`` and verifies that every relative target
+(optionally carrying a ``#anchor``) exists on disk, resolved against
+the file that contains it. External schemes (http/https/mailto) and
+pure in-page anchors are skipped. Exit code 1 lists every broken link.
+
+  python tools/check_links.py        # from the repo root (CI does this)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def iter_docs():
+    for name in ("README.md", "ROADMAP.md"):
+        p = ROOT / name
+        if p.exists():
+            yield p
+    yield from sorted((ROOT / "docs").glob("**/*.md"))
+
+
+def check(path: Path) -> list[str]:
+    broken = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            # only targets that escape the repo root are exempt
+            # (badge-style ../../ links at the hosting forge); a
+            # parent-relative link to a real repo file is still checked
+            if not resolved.is_relative_to(ROOT):
+                continue
+            if not resolved.exists():
+                broken.append(f"{path.relative_to(ROOT)}:{lineno}: "
+                              f"broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    broken, n_files = [], 0
+    for doc in iter_docs():
+        n_files += 1
+        broken.extend(check(doc))
+    for b in broken:
+        print(b)
+    print(f"checked {n_files} markdown files: "
+          f"{'FAIL, ' + str(len(broken)) + ' broken' if broken else 'all links OK'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
