@@ -1,0 +1,147 @@
+"""Heavy-hitter-aware probing (D/W-Choices, arXiv:1510.05714) — the
+skew × scale sweep gating replication AND imbalance at once.
+
+Three asserts ride this bench in CI:
+
+* **parity** — the neutral policy (threshold off, plain-chain budgets,
+  argmin fallback) routes bit-identically to policy-free PoRC, single-
+  and multi-source: the defaults-off = today's-PoRC guarantee.
+* **replication** — W-Choices at 1000 workers stays ≤ 2× unique keys at
+  every skew where the Eq.-2 lower bound admits it, and within 1.5× of
+  that bound where the bound itself exceeds 2 (extreme skew leaves a
+  few hundred unique keys, so the hottest key's balanced spread
+  ceil(p₁·n/(1+eps)) dominates the factor — no scheme can do better).
+* **imbalance** — W-Choices imbalance stays within the PoRC envelope
+  (PoRC + 0.05) across the whole grid: the extra probe depth for heavy
+  keys must not cost balance.
+
+D-Choices is recorded for the playbook numbers (its replication is the
+lowest of all, but imbalance explodes once ceil(p₁·n/(1+eps)) exceeds
+d_heavy — see docs/partitioners.md for when to pick which).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, streams
+from repro.kernels.ref import (HHPolicy, neutral_hh_policy,
+                               ref_porc_multisource, ref_porc_route)
+
+from .common import fmt, record, table, time_median
+
+EPS = 0.05
+N_KEYS = 65_536
+
+
+def _route(keys, n, policy):
+    a, _ = ref_porc_route(keys, n, block=128, eps=EPS, policy=policy)
+    return a
+
+
+def _parity_gate():
+    """Neutral policy ≡ plain PoRC, bit for bit (the CI parity gate)."""
+    n = 100
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(0), 20_000,
+                                      N_KEYS, 1.6)
+    plain = np.asarray(_route(keys, n, None))
+    neut = np.asarray(_route(keys, n, neutral_hh_policy(n)))
+    single = bool((plain == neut).all())
+
+    ms_keys = keys[:19_968]
+    pl, _ = ref_porc_multisource(ms_keys, n, 4, sync_every=2, block=64,
+                                 eps=EPS)
+    ne, _ = ref_porc_multisource(ms_keys, n, 4, sync_every=2, block=64,
+                                 eps=EPS, policy=neutral_hh_policy(n))
+    multi = bool((np.asarray(pl) == np.asarray(ne)).all())
+
+    assert single, "neutral policy diverged from plain PoRC (single-source)"
+    assert multi, "neutral policy diverged from plain PoRC (multi-source)"
+    record("hh_probing", section="parity", parity=single, ms_parity=multi)
+    print(f"parity gate: neutral policy bit-identical to PoRC "
+          f"(single={single}, S=4 multisource={multi})")
+
+
+def _sweep(m: int, quick: bool):
+    zs = (0.8, 1.4, 2.0) if quick else (0.8, 1.1, 1.4, 1.7, 2.0)
+    ns = (100, 1000)
+    schemes = [("PORC", None),
+               ("DCHOICES", HHPolicy(scheme="d")),
+               ("WCHOICES", HHPolicy(scheme="w"))]
+    rows, gate_fail = [], []
+    for z in zs:
+        keys = streams.sample_zipf_stream(jax.random.PRNGKey(1), m,
+                                          N_KEYS, z)
+        uniq, cnt = np.unique(np.asarray(keys), return_counts=True)
+        lb = float(metrics.replication_lower_bound(
+            jnp.asarray(cnt / m), 1000, EPS)) / len(uniq)
+        for n in ns:
+            caps = jnp.ones(n) / n
+            stats = {}
+            for name, pol in schemes:
+                a = _route(keys, n, pol)
+                imb = float(metrics.normalized_imbalance(a, caps))
+                repl = float(metrics.memory_footprint(
+                    a, keys, n, N_KEYS)) / len(uniq)
+                stats[name] = (imb, repl)
+                extra = {"repl_bound": lb} if n == 1000 else {}
+                record("hh_probing", section="sweep", z=z, n_bins=n,
+                       scheme=name, imbalance=imb, replication=repl,
+                       **extra)
+            rows.append([z, n,
+                         *(fmt(stats[s][0], 3) for s, _ in schemes),
+                         *(fmt(stats[s][1], 2) for s, _ in schemes),
+                         fmt(lb, 2) if n == 1000 else "-"])
+            if n == 1000:
+                imb_p, _ = stats["PORC"]
+                imb_w, repl_w = stats["WCHOICES"]
+                # replication: ≤ 2× where Eq. 2 admits it, else within
+                # 1.5× of the bound (see module docstring)
+                if repl_w > max(2.0, 1.5 * lb):
+                    gate_fail.append(
+                        f"z={z}: W replication {repl_w:.2f} > "
+                        f"max(2, 1.5*{lb:.2f})")
+                if imb_w > imb_p + 0.05:
+                    gate_fail.append(
+                        f"z={z}: W imbalance {imb_w:.3f} > "
+                        f"PoRC {imb_p:.3f} + 0.05")
+    print(table(
+        f"D/W-Choices vs PoRC — skew × workers (m={m}, eps={EPS})",
+        ["z", "workers", "imb PoRC", "imb D", "imb W",
+         "repl PoRC", "repl D", "repl W", "Eq2 lb@1000"], rows))
+    assert not gate_fail, "; ".join(gate_fail)
+    record("hh_probing", section="gate_summary", gate="pass",
+           m=m, n_gate=1000)
+    print("gate: W-Choices @1000 workers — replication ≤ max(2, 1.5×Eq2) "
+          "and imbalance ≤ PoRC+0.05 at every z: pass")
+
+
+def _throughput(quick: bool):
+    """Informational: what the sketch + deep chains cost on this host."""
+    n, m = 100, 65_536 if quick else 262_144
+    keys = streams.sample_zipf_stream(jax.random.PRNGKey(2), m, N_KEYS, 1.4)
+    rows = []
+    for name, pol in [("PORC", None), ("DCHOICES", HHPolicy(scheme="d")),
+                      ("WCHOICES", HHPolicy(scheme="w"))]:
+        t, _ = time_median(lambda: _route(keys, n, pol), reps=3)
+        rate = m / t
+        record("hh_probing", section="throughput", scheme=name, m=m,
+               n_bins=n, msgs_per_sec=rate)
+        rows.append([name, fmt(t * 1e3, 1), fmt(rate / 1e6, 2)])
+    print(table(f"policy-path throughput (m={m}, {n} workers, block=128)",
+                ["scheme", "ms", "M msg/s"], rows))
+    print("note: D/W pay for the sketch and a d_heavy/n-deep candidate "
+          "chain; the tradeoff they buy is the replication column above")
+
+
+def run(m: int = 262_144, quick: bool = False):
+    if quick:
+        m = min(m, 131_072)
+    _parity_gate()
+    _sweep(m, quick)
+    _throughput(quick)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -30,6 +30,7 @@ _METRICS = {
     "settle_slots", "post_mean_imbalance", "flaps", "peak_budget",
     "settle_adaptive", "settle_best_static", "flash_flap_ratio",
     "flash_moves_ratio", "alpha10_flap_ratio",
+    "repl_bound", "ms_parity",
 }
 
 

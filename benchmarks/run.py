@@ -18,9 +18,9 @@ import time
 import jax
 
 from . import (bench_deployment, bench_dynamic, bench_epsilon,
-               bench_heterogeneous, bench_moe_router, bench_porc_schemes,
-               bench_queue, bench_schemes_workers, bench_sources,
-               bench_virtual_workers, common, roofline)
+               bench_heterogeneous, bench_hh_probing, bench_moe_router,
+               bench_porc_schemes, bench_queue, bench_schemes_workers,
+               bench_sources, bench_virtual_workers, common, roofline)
 
 ALL = [
     ("porc_schemes", bench_porc_schemes),      # Fig 4 + block-path gate
@@ -33,6 +33,8 @@ ALL = [
     ("deployment", bench_deployment),          # Fig 14/15
     ("heterogeneous", bench_heterogeneous),    # Figs 9/10+12/13+15 via
                                                # the delegation runtime
+    ("hh_probing", bench_hh_probing),          # D/W-Choices skew sweep
+                                               # (arXiv:1510.05714)
     ("moe_router", bench_moe_router),          # beyond paper
     ("roofline", roofline),                    # §Roofline
 ]

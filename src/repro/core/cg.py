@@ -51,6 +51,13 @@ Model fidelity notes
   forces a final merge: that is when the piggybacked signals all
   arrive, so no unpublished delta survives into the next slot.
   ``n_sources=1`` is exactly the single-source block path.
+* **Heavy-hitter probing** (``hh_scheme``): D/W-Choices probe depths for
+  the PORC inner scheme — a count-min sketch (``sketch_depth`` ×
+  ``sketch_width``, carried in ``CGState.sketch``) classifies keys at
+  block boundaries; keys above ``hot_fraction`` of the routed mass get
+  up to ``d_heavy`` ("d") or V ("w") probe choices, the tail keeps
+  ``d_tail``. Off ("") = seed-exact. Requires the block path. See
+  ``repro.kernels.ref.HHPolicy`` and docs/partitioners.md.
 """
 from __future__ import annotations
 
@@ -104,9 +111,32 @@ class CGConfig(NamedTuple):
                                   # theta_idle+margin
     dwell: int = 3                # slots a raw signal must persist
                                   # before it latches
+    hh_scheme: str = ""           # heavy-hitter probe-depth policy for
+                                  # the PORC inner scheme: "" = off
+                                  # (seed-exact), "d" = D-Choices,
+                                  # "w" = W-Choices (registry spellings
+                                  # "DCHOICES"/"WCHOICES" also accepted;
+                                  # requires block_size >= 1)
+    sketch_depth: int = 4         # count-min sketch rows
+    sketch_width: int = 4096      # count-min sketch columns per row
+    hot_fraction: float = 1e-3    # heavy when sketch est >= fraction of
+                                  # the routed message mass
+    d_heavy: int = 32             # heavy-key probe ceiling under "d"
+    d_tail: int = 2               # tail-key probe budget
+    hh_headroom: float = 2.0      # probe-depth schedule slack over the
+                                  # Eq.-2 spread ceil(p·n/(1+eps))
 
 
 class CGState(NamedTuple):
+    """Everything that continues across ``run`` calls / slot boundaries.
+
+    State-carry contract: every field carries across slots *and* across
+    chained ``run`` calls (``run(cfg, rest, caps, state=prev.state)`` ==
+    one run over the whole stream, slot-aligned). Nothing here resets at
+    slot boundaries; the only slot-boundary action is the §V-C forced
+    delta-merge inside ``_route_slot`` (multi-source load views and
+    sketch deltas publish at the monitoring boundary).
+    """
     vw_load: jnp.ndarray     # [V]  source-side per-VW message counts
     vw_owner: jnp.ndarray    # [V]  physical worker owning each VW
     vw_rate: jnp.ndarray     # [V]  windowed per-VW arrival rate (EWMA)
@@ -120,6 +150,9 @@ class CGState(NamedTuple):
     moves: jnp.ndarray       # []   cumulative paired moves
     controller: controller.ControllerState   # adaptive-budget EWMA,
                              # signal latches/dwell counters, flap count
+    sketch: jnp.ndarray | None = None   # [depth, width] count-min key
+                             # frequencies (heavy-hitter policy only;
+                             # None when cfg.hh_scheme is off)
 
 
 class DelegationTelemetry(NamedTuple):
@@ -143,10 +176,47 @@ class CGResult(NamedTuple):
     state: CGState
 
 
+def _hh_letter(name: str) -> str:
+    """Normalize an hh_scheme spelling to the kernel letter. Accepts
+    the HHPolicy letters ("d"/"w") and the partitioner-registry names
+    ("DCHOICES"/"WCHOICES"), case-insensitively."""
+    letter = {"d": "d", "w": "w",
+              "dchoices": "d", "wchoices": "w"}.get(name.lower())
+    if letter is None:
+        raise ValueError(f"unknown hh_scheme {name!r}; use 'd'/'w' "
+                         f"(or 'DCHOICES'/'WCHOICES')")
+    return letter
+
+
+def hh_policy(cfg: CGConfig):
+    """The kernel ``HHPolicy`` a CGConfig's heavy-hitter knobs describe
+    (None when ``hh_scheme`` is off — the seed-exact default)."""
+    if not cfg.hh_scheme:
+        return None
+    if cfg.inner != "PORC":
+        raise ValueError("hh_scheme requires the PORC inner scheme")
+    if cfg.block_size < 1:
+        raise ValueError("hh_scheme requires the block path "
+                         "(block_size >= 1); the sketch classifies keys "
+                         "at block boundaries")
+    from repro.kernels.ref import HHPolicy  # deferred: core ← kernels
+    return HHPolicy(scheme=_hh_letter(cfg.hh_scheme), depth=cfg.sketch_depth,
+                    width=cfg.sketch_width, hot_fraction=cfg.hot_fraction,
+                    d_heavy=cfg.d_heavy, d_tail=cfg.d_tail,
+                    headroom=cfg.hh_headroom)
+
+
 def init_state(cfg: CGConfig) -> CGState:
     n, a = cfg.n_workers, cfg.alpha
     V = n * a
+    policy = hh_policy(cfg)
+    if policy is not None:
+        from repro.kernels.ref import hh_sketch_init
+        sketch = hh_sketch_init(policy)
+    else:
+        sketch = None
     return CGState(
+        sketch=sketch,
         vw_load=jnp.zeros(V, jnp.float32),
         vw_owner=jnp.tile(jnp.arange(n, dtype=jnp.int32), a),
         vw_rate=jnp.zeros(V, jnp.float32),
@@ -182,13 +252,20 @@ def controller_config(cfg: CGConfig) -> controller.ControllerConfig:
         dwell=cfg.dwell)
 
 
-def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
-    """Route one slot of messages onto virtual workers (inner scheme)."""
+def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, sketch, keys):
+    """Route one slot of messages onto virtual workers (inner scheme).
+
+    Returns ``(vw_load, sketch, vw)``; ``sketch`` is the heavy-hitter
+    count-min state (threaded unchanged for KG/SG and when the policy is
+    off, updated per block and fully published at the slot boundary for
+    PORC with ``cfg.hh_scheme`` set).
+    """
     V = cfg.n_workers * cfg.alpha
+    policy = hh_policy(cfg)
     if cfg.inner == "KG":
         vw = hash_to_bins(keys, 1, V)
         vw_load = vw_load.at[vw].add(1.0)
-        return vw_load, vw
+        return vw_load, sketch, vw
     if cfg.inner == "SG":
         # exact int32 round-robin pointer: the f32 t_offset loses ±1
         # precision past 2^24 routed messages, which would freeze the
@@ -196,7 +273,7 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
         m = keys.shape[0]
         vw = (sg_ptr + jnp.arange(m, dtype=jnp.int32)) % V
         vw_load = vw_load.at[vw].add(1.0)
-        return vw_load, vw
+        return vw_load, sketch, vw
 
     if cfg.n_sources > 1:
         # §V-C distributed sources: the slot's stream splits round-robin
@@ -213,11 +290,16 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
             base=vw_load,
             delta=jnp.zeros((cfg.n_sources, V), jnp.float32),
             routed=t_offset,
-            ticks=jnp.zeros((), jnp.int32))
+            ticks=jnp.zeros((), jnp.int32),
+            sketch_base=sketch,
+            sketch_delta=None if sketch is None else jnp.zeros(
+                (cfg.n_sources,) + sketch.shape, jnp.float32))
         vw, state = ref_porc_multisource(
             keys, V, cfg.n_sources, sync_every=cfg.sync_every,
-            block=cfg.block_size, eps=cfg.eps, state=state)
-        return state.base + state.delta.sum(0), vw
+            block=cfg.block_size, eps=cfg.eps, state=state, policy=policy)
+        sketch = (None if state.sketch_base is None
+                  else state.sketch_base + state.sketch_delta.sum(0))
+        return state.base + state.delta.sum(0), sketch, vw
 
     if cfg.block_size >= 1:
         # Block-parallel PoRC: route the slot in blocks of B messages
@@ -225,10 +307,10 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
         # kernels' block-synchronous semantics). Bit-identical to the
         # sequential path below when block_size == 1.
         from repro.kernels.ref import PorcState, ref_porc_route
-        state = PorcState(load=vw_load, routed=t_offset)
+        state = PorcState(load=vw_load, routed=t_offset, sketch=sketch)
         vw, state = ref_porc_route(keys, V, block=cfg.block_size,
-                                   eps=cfg.eps, state=state)
-        return state.load, vw
+                                   eps=cfg.eps, state=state, policy=policy)
+        return state.load, state.sketch, vw
 
     # PoRC (Alg. 1) continuing across slots: capacity uses global time.
     max_probes = 4 * V
@@ -254,7 +336,7 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, keys):
         return (load.at[bin_].add(1.0), t + 1.0), bin_
 
     (vw_load, _), vw = jax.lax.scan(step, (vw_load, t_offset), keys)
-    return vw_load, vw
+    return vw_load, sketch, vw
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -290,8 +372,9 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
 
     def slot_step(state: CGState, xs):
         slot_keys, c = xs
-        vw_load, vw = _route_slot(cfg, state.vw_load, state.t_offset,
-                                  state.sg_ptr, slot_keys)
+        vw_load, sketch, vw = _route_slot(cfg, state.vw_load,
+                                          state.t_offset, state.sg_ptr,
+                                          state.sketch, slot_keys)
         workers = state.vw_owner[vw]                       # [slot_len]
         arrivals = jnp.zeros(cfg.n_workers, jnp.float32).at[workers].add(1.0)
 
@@ -340,6 +423,7 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
             sg_ptr=(state.sg_ptr + cfg.slot_len) % (cfg.n_workers * cfg.alpha),
             moves=dstate.moves,
             controller=cstate,
+            sketch=sketch,
         )
         metrics = (workers, vw, imb, jnp.max(q1) - jnp.min(q1),
                    jnp.max(lat) - jnp.min(lat), mean_lat, util,
@@ -347,6 +431,15 @@ def run(cfg: CGConfig, keys: jnp.ndarray, capacities: jnp.ndarray,
         return new_state, metrics
 
     state0 = init_state(cfg) if state is None else state
+    # normalize the sketch lane to cfg: a state carried from a policy-off
+    # run cold-starts an empty sketch (scan carries need a fixed pytree
+    # structure); turning the policy off drops the lane
+    policy = hh_policy(cfg)
+    if policy is not None and state0.sketch is None:
+        from repro.kernels.ref import hh_sketch_init
+        state0 = state0._replace(sketch=hh_sketch_init(policy))
+    elif policy is None and state0.sketch is not None:
+        state0 = state0._replace(sketch=None)
     state, (workers, vw, imb, qs, ls, ml, util,
             budget, executed, flaps, depths) = jax.lax.scan(
         slot_step, state0, (keys, caps))

@@ -17,6 +17,8 @@ PoTC  power of two choices              2 msg-choices, argmin   load state
 CH    consistent hashing bounded load   clockwise probe < cap   ring + load
 PoRC  power of random choices (Alg. 1)  salted probe < cap      load state
 GREEDY_D  Greedy-d (§VI-A-1)            d key-choices, argmin   load state
+D-Choices  heavy keys ≤ d_heavy probes, tail keys 2   load + sketch
+W-Choices  heavy keys ≤ n probes, tail keys 2         load + sketch
 
 Each load-stateful scheme (PKG/PoTC/PoRC) also has a ``*_blocked``
 block-parallel variant routing B messages per load snapshot —
@@ -26,6 +28,20 @@ engine itself lives in ``repro.kernels`` (Pallas kernel + jnp oracle),
 as does the multi-source engine behind
 ``power_of_random_choices_multisource`` (§V-C: S sources with local
 load views, delta-merge synchronized).
+
+D-Choices / W-Choices ("When Two Choices Are not Enough",
+arXiv:1510.05714) ride the same block engine with a per-key probe-depth
+policy: a count-min sketch classifies each key at the block boundary,
+heavy keys get up to ``d_heavy`` (D) or ``n_bins`` (W) probe choices
+while the tail keeps ``d_tail=2`` — bounding imbalance *and* key
+replication at once. See ``repro.kernels.ref.HHPolicy`` and
+``docs/partitioners.md`` for the playbook.
+
+State-carry contract: every partitioner in this module routes the whole
+stream it is given against *fresh* state (zero loads, empty sketch) and
+discards that state on return — calls never observe each other. For
+state that continues across calls (slots, serving), drive the kernel
+engines via ``repro.core.cg`` or ``repro.serve`` instead.
 """
 from __future__ import annotations
 
@@ -203,17 +219,55 @@ def power_of_random_choices_blocked(keys: jnp.ndarray, n_bins: int,
 def power_of_random_choices_multisource(keys: jnp.ndarray, n_bins: int,
                                         n_sources: int, eps: float = 0.01,
                                         block: int = 128,
-                                        sync_every: int = 1) -> jnp.ndarray:
+                                        sync_every: int = 1,
+                                        hh=None) -> jnp.ndarray:
     """Multi-source PoRC (§V-C): the stream splits round-robin across
     ``n_sources`` sources, each routing blocks against its local load
     view (shared merged base + own unpublished delta); views synchronize
     by delta-merge every ``sync_every`` blocks. ``n_sources=1,
-    sync_every=1`` is bit-identical to the blocked single-source path."""
+    sync_every=1`` is bit-identical to the blocked single-source path.
+    ``hh`` (an ``HHPolicy``) turns on heavy-hitter-aware probe depths;
+    the per-source sketch deltas merge on the same sync cadence."""
     from repro.kernels.ref import ref_porc_multisource  # deferred: core ← kernels
     assign, _ = ref_porc_multisource(keys, n_bins, n_sources,
                                      sync_every=sync_every, block=block,
-                                     eps=eps)
+                                     eps=eps, policy=hh)
     return assign
+
+
+# ---------------------------------------------------------------------------
+# D-Choices / W-Choices — heavy-hitter-aware probe depths (1510.05714)
+# ---------------------------------------------------------------------------
+
+def _hh_choices(keys: jnp.ndarray, n_bins: int, scheme: str, eps: float,
+                block: int, hh) -> jnp.ndarray:
+    from repro.kernels.ref import HHPolicy, ref_porc_route  # core ← kernels
+    policy = HHPolicy(scheme=scheme) if hh is None else hh._replace(scheme=scheme)
+    assign, _ = ref_porc_route(keys, n_bins, block=block, eps=eps,
+                               policy=policy)
+    return assign
+
+
+def d_choices(keys: jnp.ndarray, n_bins: int, eps: float = 0.01,
+              block: int = 128, hh=None) -> jnp.ndarray:
+    """D-Choices: PoRC block engine with per-key probe budgets — heavy
+    keys (count-min estimate ≥ ``hot_fraction``·m_t) probe up to
+    ``d_heavy`` salted choices, tail keys keep ``d_tail=2``. Caps the
+    replication of *every* key at d_heavy; imbalance degrades once the
+    hottest key's balanced spread ceil(p₁·n/(1+eps)) exceeds d_heavy —
+    prefer W-Choices past that point (see docs/partitioners.md).
+    ``hh`` overrides the default ``HHPolicy`` knobs (scheme is forced)."""
+    return _hh_choices(keys, n_bins, "d", eps, block, hh)
+
+
+def w_choices(keys: jnp.ndarray, n_bins: int, eps: float = 0.01,
+              block: int = 128, hh=None) -> jnp.ndarray:
+    """W-Choices: like D-Choices but a heavy key's probe ceiling is the
+    full worker set, with the budget still set per key by the Eq.-2
+    schedule ceil(headroom·p̂·n/(1+eps)) — tail replication stays at
+    d_tail while the few heavy keys spread just wide enough to balance.
+    ``hh`` overrides the default ``HHPolicy`` knobs (scheme is forced)."""
+    return _hh_choices(keys, n_bins, "w", eps, block, hh)
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +331,7 @@ def consistent_hashing_bounded(keys: jnp.ndarray, n_bins: int,
 
 def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
           eps: float = 0.01, block_size: int | None = None,
-          sources: int = 1, sync_every: int = 1) -> jnp.ndarray:
+          sources: int = 1, sync_every: int = 1, hh=None) -> jnp.ndarray:
     """Route a full stream with the named scheme (paper Table II symbols).
 
     ``block_size=None`` uses the exact sequential oracles (one message
@@ -293,10 +347,28 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
     (requires the block path; KG/SG are source-oblivious and the other
     load-stateful schemes have no multi-source variant — they reject
     ``sources > 1``).
+
+    ``DCHOICES`` / ``WCHOICES`` are block-native (the sketch classifies
+    keys at block boundaries — there is no sequential oracle), so
+    ``block_size=None`` means the default block of 128; both accept
+    ``sources > 1``. ``hh`` (a ``kernels.ref.HHPolicy``) overrides the
+    sketch/budget knobs for them and is rejected for every other scheme.
     """
     scheme = scheme.upper()
-    if sources > 1 and scheme not in ("PORC", "KG", "SG"):
+    if sources > 1 and scheme not in ("PORC", "KG", "SG") + HH_SCHEMES:
         raise ValueError(f"scheme {scheme!r} has no multi-source variant")
+    if hh is not None and scheme not in HH_SCHEMES:
+        raise ValueError(f"scheme {scheme!r} takes no heavy-hitter policy")
+    if scheme in HH_SCHEMES:
+        from repro.kernels.ref import HHPolicy  # deferred: core ← kernels
+        letter = "d" if scheme == "DCHOICES" else "w"
+        if sources > 1:
+            policy = (HHPolicy(scheme=letter) if hh is None
+                      else hh._replace(scheme=letter))
+            return power_of_random_choices_multisource(
+                keys, n_bins, sources, eps=eps, block=block_size or 128,
+                sync_every=sync_every, hh=policy)
+        return _hh_choices(keys, n_bins, letter, eps, block_size or 128, hh)
     if scheme == "KG":
         return key_grouping(keys, n_bins)
     if scheme == "SG":
@@ -325,3 +397,4 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
 
 ALL_SCHEMES = ("KG", "SG", "PKG", "POTC", "CH", "PORC")
 BLOCKED_SCHEMES = ("PKG", "POTC", "PORC")
+HH_SCHEMES = ("DCHOICES", "WCHOICES")

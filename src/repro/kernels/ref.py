@@ -105,14 +105,28 @@ class PorcState(NamedTuple):
     ``load`` is the (eventually-consistent) per-bin message count and
     ``routed`` the global message clock m_t that drives the capacity
     (1+eps)·m_t/n — together they are everything Alg. 1 remembers.
+    ``sketch`` is the count-min heavy-hitter sketch that drives the
+    per-key probe depths when a :class:`HHPolicy` is active (``None``
+    otherwise — the default engine never materializes it).
+
+    State-carry contract: every field continues across calls — splitting
+    a stream over multiple ``ref_porc_route`` calls with the carried
+    state is bit-identical to one call (block boundaries realign per
+    call, the only alignment caveat). Nothing here resets at slot
+    boundaries; the CG simulator carries the state through
+    ``CGState.vw_load``/``t_offset``/``sketch`` instead.
     """
     load: jnp.ndarray     # [n_bins] f32
     routed: jnp.ndarray   # []       f32
+    sketch: jnp.ndarray | None = None   # [depth, width] f32 count-min
+                          # counts (only when an HHPolicy is active)
 
 
-def porc_state_init(n_bins: int) -> PorcState:
+def porc_state_init(n_bins: int,
+                    policy: "HHPolicy | None" = None) -> PorcState:
     return PorcState(load=jnp.zeros(n_bins, jnp.float32),
-                     routed=jnp.zeros((), jnp.float32))
+                     routed=jnp.zeros((), jnp.float32),
+                     sketch=None if policy is None else hh_sketch_init(policy))
 
 
 def block_spans(m: int, block: int) -> list[tuple[int, int, int]]:
@@ -237,6 +251,210 @@ def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     return assign.reshape(-1), load
 
 
+# ---------------------------------------------------------------------------
+# Heavy-hitter-aware probe depth — D-Choices / W-Choices
+# (arXiv:1510.05714 "When Two Choices Are not Enough")
+# ---------------------------------------------------------------------------
+
+class HHPolicy(NamedTuple):
+    """Static per-key probe-depth policy driven by a count-min sketch.
+
+    PoRC gives every key the same probe budget; at scale the few heavy
+    keys need *many* choices while the long tail needs only two — that
+    is what bounds imbalance and replication simultaneously. The policy
+    classifies each key against a device-resident count-min sketch at
+    the block boundary (snapshot semantics, like the load itself) and
+    assigns a per-key probe budget:
+
+    * **tail** (estimate < ``hot_fraction`` · routed mass): ``d_tail``
+      salted choices; on cap exhaustion the key falls back to the
+      least-loaded bin *among its own candidates* (PKG-style), so a
+      tail key is ever stored on at most ``d_tail`` bins.
+    * **heavy**: the probe-depth schedule
+      ``d_tail + ceil(headroom · p̂ · n/(1+eps))`` — the Eq.-2 minimum
+      spread a key of estimated share p̂ needs, with slack — clipped to
+      ``d_heavy`` under scheme ``"d"`` (D-Choices) or to ``n_bins``
+      under ``"w"`` (W-Choices: the full choice set).
+
+    A key whose budget exceeds the materialized candidate chain is
+    entitled to more choices than were hashed: it falls back to the
+    *full* choice set (the least-loaded bins, spread in load order so a
+    hot key's block never piles onto a single bin;
+    ``spread_fallback=False`` keeps the plain engine's single-argmin
+    fallback instead). That rule makes the *neutral* policy —
+    ``hot_fraction >= 1`` (threshold off) with ``d_tail`` above the
+    chain length and ``spread_fallback=False`` — bit-identical to the
+    plain snapshot engine at block > 1: the CI parity gate.
+
+    All fields are Python scalars, so the policy is hashable and rides
+    as a static jit argument; ``None`` policy compiles to exactly the
+    sketch-free engine.
+    """
+    scheme: str = "d"            # "d": heavy depth capped at d_heavy;
+                                 # "w": cap lifted to n_bins (full set)
+    depth: int = 4               # sketch rows (independent hashes)
+    width: int = 4096            # sketch columns per row; keep width
+                                 # >= ~4/hot_fraction so collision noise
+                                 # (~m/width per row) stays below the
+                                 # heavy threshold
+    hot_fraction: float = 1e-3   # heavy when est >= hot_fraction * m_t
+    d_heavy: int = 32            # probe-depth ceiling for heavy keys
+                                 # under scheme "d"
+    d_tail: int = 2              # probe budget for tail keys
+    headroom: float = 2.0        # schedule slack over the Eq.-2
+                                 # minimum spread ceil(p·n/(1+eps))
+    chain: int = 0               # materialized candidates per key; 0 =
+                                 # auto (the scheme ceiling, so every
+                                 # budget is candidate-bounded). Budgets
+                                 # beyond the chain fall back to the
+                                 # full choice set.
+    rotate_duplicates: bool = True  # the r-th in-block duplicate of a
+                                 # key starts probing at candidate r of
+                                 # its window, so a hot key's block
+                                 # doesn't pile onto one snapshot bin
+                                 # (False: plain first-fit — parity)
+    spread_fallback: bool = True # full-choice-set fallback spreads over
+                                 # the least-loaded bins in load order
+                                 # (False: single argmin bin — the plain
+                                 # engine's fallback, the parity config)
+
+
+def neutral_hh_policy(n_bins: int, **kw) -> HHPolicy:
+    """The policy that routes bit-identically to the plain engine at
+    block > 1 (threshold off, tail budget beyond the chain, first-fit
+    order, argmin fallback) while still exercising the whole
+    sketch/budget machinery — the CI parity configuration."""
+    return HHPolicy(scheme="w", hot_fraction=2.0, d_tail=4 * n_bins + 1,
+                    chain=1, rotate_duplicates=False,
+                    spread_fallback=False, **kw)
+
+
+# sketch hashes live in their own salt space, disjoint from the probe
+# chain's small consecutive salts
+_SKETCH_SALT0 = 0x5EEDC0DE
+
+
+def _sketch_cols(policy: HHPolicy, keys: jnp.ndarray) -> jnp.ndarray:
+    salts = _SKETCH_SALT0 + jnp.arange(policy.depth, dtype=jnp.uint32)
+    return hash_to_bins(keys[..., None], salts, policy.width)
+
+
+def hh_sketch_init(policy: HHPolicy) -> jnp.ndarray:
+    """Zeroed count-min counts [depth, width]."""
+    return jnp.zeros((policy.depth, policy.width), jnp.float32)
+
+
+def hh_sketch_update(policy: HHPolicy, counts: jnp.ndarray,
+                     keys: jnp.ndarray,
+                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Add ``keys`` (optionally weighted) into the sketch. The sketch is
+    *linear*: updating with two streams in any order — or merging two
+    sketches by addition — equals updating with the concatenation,
+    which is exactly why it threads through the multi-source
+    delta-merge path unchanged."""
+    cols = _sketch_cols(policy, keys)                       # [..., depth]
+    w = (jnp.ones(keys.shape, jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return counts.at[jnp.arange(policy.depth), cols].add(w[..., None])
+
+
+def hh_sketch_query(policy: HHPolicy, counts: jnp.ndarray,
+                    keys: jnp.ndarray) -> jnp.ndarray:
+    """Estimated count per key: min over rows (never underestimates)."""
+    cols = _sketch_cols(policy, keys)
+    return counts[jnp.arange(policy.depth), cols].min(-1)
+
+
+def _hh_budgets(policy: HHPolicy, n_bins: int, eps: float,
+                est: jnp.ndarray, mass) -> jnp.ndarray:
+    """Per-key probe budgets: the probe-depth schedule.
+
+    ``est`` are sketch estimates, ``mass`` the routed message mass the
+    estimates are measured against (broadcastable). Tail keys get
+    ``d_tail``; heavy keys get the Eq.-2-derived spread, clipped to the
+    scheme's ceiling (``d_heavy`` for "d", ``n_bins`` for "w").
+    """
+    mass = jnp.maximum(jnp.asarray(mass, jnp.float32), 1.0)
+    heavy = est >= policy.hot_fraction * mass
+    need = jnp.ceil(policy.headroom * (est / mass) * n_bins / (1.0 + eps))
+    ceiling = max(n_bins if policy.scheme == "w" else policy.d_heavy,
+                  policy.d_tail + 1)
+    bud = jnp.clip(need.astype(jnp.int32) + policy.d_tail,
+                   policy.d_tail + 1, ceiling)
+    return jnp.where(heavy, bud, jnp.int32(policy.d_tail))
+
+
+def _hh_chunk(policy: HHPolicy, chunk: int, n_bins: int) -> int:
+    """Candidates to materialize per key: by default the chain covers
+    the scheme's budget ceiling (``d_heavy`` for "d", ``n_bins`` for
+    "w") so every policy budget is candidate-bounded — a heavy key's
+    replication then stays confined to its own salted chain instead of
+    leaking onto whichever bins happen to be least loaded per block.
+    ``policy.chain`` overrides the ceiling (the neutral/parity config
+    pins it to the plain engine's chunk)."""
+    ceiling = policy.chain or (n_bins if policy.scheme == "w"
+                               else policy.d_heavy)
+    return max(chunk, min(ceiling, n_bins))
+
+
+def _snapshot_block_hh(load, cap, kblk, cand, bud, n_bins: int,
+                       rotate: bool, spread: bool):
+    """Route one block against a frozen snapshot with per-key budgets.
+
+    Each key probes its salted candidates in order and stops at the
+    first bin below ``cap``, exactly like ``_snapshot_block``, but only
+    its first ``bud[k]`` candidates are admissible. With ``rotate``,
+    the r-th in-block duplicate of a key starts probing at offset r of
+    its admissible window (wrapping), so a hot key's block spreads over
+    its under-cap candidates instead of piling onto the first one the
+    frozen snapshot shows as free. On exhaustion:
+    * budget within the materialized chain → least-loaded bins among
+      the key's own admissible candidates, duplicates rotated across
+      the load order (bounds its replication at bud),
+    * budget beyond the chain (a tail budget set past the chain — the
+      neutral/parity config) → the full choice set: least-loaded bins
+      spread in load order (``spread``), or the single argmin bin.
+    """
+    B, C = cand.shape
+    idx = jnp.arange(C)
+    window = jnp.minimum(bud, C)                       # admissible width
+    admissible = idx[None, :] < window[:, None]
+    ok = (load[cand] < cap) & admissible
+    if rotate:
+        i = jnp.arange(B)
+        eq = kblk[:, None] == kblk[None, :]
+        dup = (eq & (i[None, :] < i[:, None])).sum(1)  # in-block dup rank
+        count = eq.sum(1)                              # in-block copies
+        # spread the key's copies evenly across its window — adjacent
+        # offsets would collide on the same first under-cap candidate
+        offset = (dup * window) // jnp.maximum(count, 1)
+        pos = jnp.mod(idx[None, :] - offset[:, None],
+                      jnp.maximum(window[:, None], 1))
+    else:
+        pos = jnp.broadcast_to(idx[None, :], (B, C))
+    first = jnp.argmin(jnp.where(ok, pos, C + 1), axis=1)
+    pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+    resolved = jnp.any(ok, axis=1)
+    # bounded choice set: least-loaded among the key's own candidates.
+    # With rotation the tie is broken by a potential score load + pos,
+    # where pos is the candidate's rotated distance from the
+    # duplicate's own offset measured in messages (one step forward =
+    # one message of load) — duplicates settle into *distinct* light
+    # bins without the per-row sort a "dup-th least loaded" pick needs.
+    loadc = jnp.where(admissible, load[cand], jnp.inf)
+    fbidx = jnp.argmin(loadc + pos if rotate else loadc, axis=1)
+    candmin = jnp.take_along_axis(cand, fbidx[:, None], 1)[:, 0]
+    over = bud > C                       # entitled to the full choice set
+    if spread:
+        border = jnp.argsort(load).astype(jnp.int32)
+        leftpos = jnp.cumsum((~resolved & over).astype(jnp.int32)) - 1
+        globpick = border[leftpos % n_bins]
+    else:
+        globpick = jnp.broadcast_to(jnp.argmin(load).astype(jnp.int32), (B,))
+    fallback = jnp.where(over, globpick, candmin)
+    return jnp.where(resolved, pick, fallback)
+
+
 def route_in_spans(keys: jnp.ndarray, block: int, carry, step):
     """Drive a jitted block engine over ``block_spans`` of a stream.
 
@@ -255,7 +473,8 @@ def route_in_spans(keys: jnp.ndarray, block: int, carry, step):
 
 def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
                    eps: float = 0.05, state: PorcState | None = None,
-                   engine: str = "snapshot"):
+                   engine: str = "snapshot",
+                   policy: HHPolicy | None = None):
     """Route an arbitrary-length key stream in blocks of ``block``.
 
     ``engine="snapshot"`` (the fast path) probes block-boundary load
@@ -269,10 +488,40 @@ def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     state. With ``block=1`` both engines are bit-identical to the
     sequential oracle ``partitioners.power_of_random_choices``.
 
+    ``policy`` (snapshot engine only) turns on heavy-hitter-aware probe
+    depths — D/W-Choices, see :class:`HHPolicy` — with the count-min
+    sketch carried in ``state.sketch``; it routes through the
+    multi-source engine at S=1 (bit-identical framing, CI-gated for the
+    policy-free case). With a policy, ``block=1`` is *not* the
+    sequential oracle: the probe budget is policy-defined, not Alg. 1's
+    4·n chain.
+
+    State-carry contract: ``state`` (load, clock, sketch) continues
+    across calls — split-call == one-call with aligned block
+    boundaries; nothing resets here.
+
     Returns (assignment [M] int32, new PorcState).
     """
     if state is None:
-        state = porc_state_init(n_bins)
+        state = porc_state_init(n_bins, policy)
+    if policy is not None:
+        if engine != "snapshot":
+            raise ValueError("HHPolicy requires the snapshot engine")
+        skb = state.sketch if state.sketch is not None \
+            else hh_sketch_init(policy)
+        ms = MultiSourcePorcState(
+            base=state.load,
+            delta=jnp.zeros((1, n_bins), jnp.float32),
+            routed=state.routed,
+            ticks=jnp.zeros((), jnp.int32),
+            sketch_base=skb,
+            sketch_delta=jnp.zeros((1,) + skb.shape, jnp.float32))
+        assign, ms = ref_porc_multisource(
+            keys, n_bins, 1, sync_every=1, block=block, eps=eps,
+            state=ms, policy=policy)
+        return assign, PorcState(
+            load=ms.base + ms.delta.sum(0), routed=ms.routed,
+            sketch=ms.sketch_base + ms.sketch_delta.sum(0))
     eng = {"snapshot": ref_porc_snapshot,
            "strict": ref_porc_assign}[engine]
 
@@ -301,26 +550,52 @@ class MultiSourcePorcState(NamedTuple):
     ``ticks`` carries the sync phase (blocks routed since the last
     merge) across calls, so a stream fed in batches shorter than one
     sync period still merges on schedule instead of never.
+
+    When an :class:`HHPolicy` is active the count-min sketch shards the
+    same way: ``sketch_base`` is the merged sketch and
+    ``sketch_delta[s]`` source s's unpublished counts — a source
+    classifies keys against its *local* sketch view ``sketch_base +
+    sketch_delta[s]`` and the deltas merge (by addition — the sketch is
+    linear) on the same schedule as the load deltas. Both stay ``None``
+    without a policy.
+
+    State-carry contract: every field continues across
+    ``ref_porc_multisource`` calls (split-call == one-call, CI-gated);
+    ``multisource_merge`` — and the sub-S ragged tail, which publishes
+    immediately — fold the deltas into the bases and reset ``ticks``,
+    which is what a monitoring-slot boundary does.
     """
     base: jnp.ndarray     # [n_bins]    f32 merged (synchronized) load
     delta: jnp.ndarray    # [S, n_bins] f32 per-source unpublished counts
     routed: jnp.ndarray   # []          f32 global message clock m_t
     ticks: jnp.ndarray    # []          i32 blocks since the last merge
+    sketch_base: jnp.ndarray | None = None    # [depth, width] f32 merged
+                          # count-min counts (HHPolicy only)
+    sketch_delta: jnp.ndarray | None = None   # [S, depth, width] f32
+                          # per-source unpublished sketch counts
 
 
-def multisource_state_init(n_bins: int, n_sources: int) -> MultiSourcePorcState:
+def multisource_state_init(n_bins: int, n_sources: int,
+                           policy: "HHPolicy | None" = None,
+                           ) -> MultiSourcePorcState:
     return MultiSourcePorcState(
         base=jnp.zeros(n_bins, jnp.float32),
         delta=jnp.zeros((n_sources, n_bins), jnp.float32),
         routed=jnp.zeros((), jnp.float32),
-        ticks=jnp.zeros((), jnp.int32))
+        ticks=jnp.zeros((), jnp.int32),
+        sketch_base=None if policy is None else hh_sketch_init(policy),
+        sketch_delta=None if policy is None else jnp.zeros(
+            (n_sources, policy.depth, policy.width), jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_bins", "n_sources", "sync_every", "block", "eps", "chunk", "engine"))
+    "n_bins", "n_sources", "sync_every", "block", "eps", "chunk", "engine",
+    "policy"))
 def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
                            sync_every: int, block: int, eps: float,
-                           chunk: int, engine: str, base0, delta0, ticks0):
+                           chunk: int, engine: str, base0, delta0, ticks0,
+                           skb0=None, skd0=None,
+                           policy: HHPolicy | None = None):
     """Core multi-source scan over full per-source blocks.
 
     ``keys`` is the round-robin-interleaved global stream (message i
@@ -329,6 +604,14 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
     ``base + delta[s]`` (``_snapshot_block`` or the rank-sequential
     ``_porc_block``, vmapped over sources); every ``sync_every`` steps
     the deltas merge into the base.
+
+    With a ``policy`` (snapshot engine only) each source additionally
+    classifies its block against its local sketch view at the block
+    boundary, routes with per-key probe budgets
+    (``_snapshot_block_hh``), and folds the block into its sketch delta
+    afterwards — so the heavy/tail decision is one block stale, the
+    same staleness license as the load snapshot itself. ``policy=None``
+    traces to exactly the sketch-free engine (bit-identical).
     """
     S = n_sources
     M = keys.shape[0]
@@ -338,14 +621,23 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
     # source s's k-th message of its b-th block
     kb = keys.reshape(nb, block, S).transpose(0, 2, 1)
     if engine == "snapshot":
-        salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
-        cand0 = hash_to_bins(kb[..., None], salts0, n_bins)  # [nb,S,block,chunk]
-        xs_extra = (cand0,)
+        chunk_eff = (chunk if policy is None
+                     else _hh_chunk(policy, chunk, n_bins))
+        salts0 = jnp.arange(1, chunk_eff + 1, dtype=jnp.uint32)
+        if policy is None:
+            cand0 = hash_to_bins(kb[..., None], salts0, n_bins)
+            xs_extra = (cand0,)             # [nb, S, block, C] hoisted
+        else:
+            # the policy chain can be n_bins deep — hash per block inside
+            # the scan instead of hoisting [nb, S, block, n_bins] for the
+            # whole stream
+            xs_extra = ()
         route_block = jax.vmap(
             lambda view, cap, kblk, cblk: _snapshot_block(
                 view, cap, kblk, cblk, n_bins, block, chunk),
             in_axes=(0, 0, 0, 0))
     else:        # "strict": in-block contention resolved rank by rank
+        assert policy is None, "HHPolicy requires the snapshot engine"
         xs_extra = ()
         route_block = jax.vmap(
             lambda view, cap, kblk: _porc_block(
@@ -353,7 +645,7 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
             in_axes=(0, 0, 0))
 
     def blk(carry, xs):
-        base, delta = carry
+        base, delta, skb, skd = carry
         b, kblk, *extra = xs
         # Per-source capacity from the mass of its *local view* (merged
         # base + own delta) — not the global clock. A cap the source
@@ -368,57 +660,101 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
         # (at S=1 this reduces bit-exactly to ``ref_porc_snapshot``'s
         # capacity); a full +block per source would hand the S sources
         # S·(1+eps)·block/n of joint slack on a shared hot bin.
-        cap = (1.0 + eps) * (base.sum() + delta.sum(1) + block / S) / n_bins
+        mass = base.sum() + delta.sum(1)                  # [S] local view
+        cap = (1.0 + eps) * (mass + block / S) / n_bins
         views = base[None, :] + delta                     # [S, n_bins]
-        assign = route_block(views, cap, kblk, *extra)    # [S, block]
+        if policy is None:
+            assign = route_block(views, cap, kblk, *extra)   # [S, block]
+        else:
+            # heavy/tail classification against the block-boundary local
+            # sketch view, per-key budgets from the probe-depth schedule
+            cand = hash_to_bins(kblk[..., None], salts0, n_bins)
+            est = jax.vmap(lambda d, k: hh_sketch_query(policy, skb + d, k))(
+                skd, kblk)                                # [S, block]
+            bud = _hh_budgets(policy, n_bins, eps, est, mass[:, None])
+            assign = jax.vmap(
+                lambda view, c, kk, cblk, bd: _snapshot_block_hh(
+                    view, c, kk, cblk, bd, n_bins,
+                    policy.rotate_duplicates, policy.spread_fallback))(
+                views, cap, kblk, cand, bud)
+            skd = jax.vmap(lambda d, k: hh_sketch_update(policy, d, k))(
+                skd, kblk)
         delta = jax.vmap(lambda d, a: d.at[a].add(1.0))(delta, assign)
         # piggyback merge — phase continues from ticks0 across calls
         sync = ((ticks0 + b + 1) % sync_every) == 0
         base = jnp.where(sync, base + delta.sum(0), base)
         delta = jnp.where(sync, jnp.zeros_like(delta), delta)
-        return (base, delta), assign
+        if policy is not None:
+            skb = jnp.where(sync, skb + skd.sum(0), skb)
+            skd = jnp.where(sync, jnp.zeros_like(skd), skd)
+        return (base, delta, skb, skd), assign
 
-    (base, delta), assign = jax.lax.scan(
-        blk, (base0, delta0),
+    (base, delta, skb, skd), assign = jax.lax.scan(
+        blk, (base0, delta0, skb0, skd0),
         (jnp.arange(nb, dtype=jnp.int32), kb, *xs_extra))
     # invert the round-robin interleave back to global message order
     return (assign.transpose(0, 2, 1).reshape(-1), base, delta,
-            (ticks0 + nb) % sync_every)
+            (ticks0 + nb) % sync_every, skb, skd)
 
 
 @functools.partial(jax.jit, static_argnames=("n_bins", "n_sources", "eps",
-                                             "chunk"))
+                                             "chunk", "policy"))
 def _porc_multisource_tail(keys_pad: jnp.ndarray, n_bins: int, n_sources: int,
-                           eps: float, chunk: int, base0, delta0, n_tail):
+                           eps: float, chunk: int, base0, delta0, n_tail,
+                           skb0=None, skd0=None,
+                           policy: HHPolicy | None = None):
     """Ragged tail: the final r < S messages, one to each of sources
     0..r-1. ``keys_pad`` is padded to [S]; sources ≥ ``n_tail`` route a
     phantom key whose assignment is discarded and whose delta update is
     masked out, so one compiled program covers every r. The residue
-    publishes immediately (merged base, zero deltas): it is less than
-    one block, so it cannot advance the block-granular sync phase, and
-    leaving it unpublished would let a stream fed in sub-S batches
-    accumulate lane deltas that never merge — breaking the documented
-    one-sync-period staleness bound.
+    publishes immediately (merged base, zero deltas — and likewise the
+    sketch, when a policy is active): it is less than one block, so it
+    cannot advance the block-granular sync phase, and leaving it
+    unpublished would let a stream fed in sub-S batches accumulate lane
+    deltas that never merge — breaking the documented one-sync-period
+    staleness bound.
     """
     S = n_sources
     active = (jnp.arange(S) < n_tail)
+    chunk_eff = chunk if policy is None else _hh_chunk(policy, chunk, n_bins)
     cand0 = hash_to_bins(keys_pad[:, None, None],
-                         jnp.arange(1, chunk + 1, dtype=jnp.uint32), n_bins)
-    cap = (1.0 + eps) * (base0.sum() + delta0.sum(1) + 1.0 / S) / n_bins
-    assign = jax.vmap(
-        lambda view, kblk, cblk, c: _snapshot_block(
-            view, c, kblk, cblk, n_bins, 1, chunk))(
-        base0[None, :] + delta0, keys_pad[:, None], cand0, cap)[:, 0]
+                         jnp.arange(1, chunk_eff + 1, dtype=jnp.uint32),
+                         n_bins)
+    mass = base0.sum() + delta0.sum(1)
+    cap = (1.0 + eps) * (mass + 1.0 / S) / n_bins
+    if policy is None:
+        assign = jax.vmap(
+            lambda view, kblk, cblk, c: _snapshot_block(
+                view, c, kblk, cblk, n_bins, 1, chunk))(
+            base0[None, :] + delta0, keys_pad[:, None], cand0, cap)[:, 0]
+        skb, skd = skb0, skd0
+    else:
+        est = jax.vmap(
+            lambda d, k: hh_sketch_query(policy, skb0 + d, k))(
+            skd0, keys_pad[:, None])                       # [S, 1]
+        bud = _hh_budgets(policy, n_bins, eps, est, mass[:, None])
+        assign = jax.vmap(
+            lambda view, kk, cblk, c, bd: _snapshot_block_hh(
+                view, c, kk, cblk, bd, n_bins,
+                policy.rotate_duplicates, policy.spread_fallback))(
+            base0[None, :] + delta0, keys_pad[:, None], cand0, cap,
+            bud)[:, 0]
+        skd = jax.vmap(
+            lambda d, k, m: hh_sketch_update(policy, d, k, weights=m))(
+            skd0, keys_pad[:, None], active.astype(jnp.float32)[:, None])
+        skb = skb0 + skd.sum(0)
+        skd = jnp.zeros_like(skd)
     delta = jax.vmap(lambda d, a, m: d.at[a].add(m))(
         delta0, assign, active.astype(jnp.float32))
-    return assign, base0 + delta.sum(0), jnp.zeros_like(delta)
+    return assign, base0 + delta.sum(0), jnp.zeros_like(delta), skb, skd
 
 
 def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
                          sync_every: int = 1, block: int = 128,
                          eps: float = 0.05, chunk: int = 8,
                          state: MultiSourcePorcState | None = None,
-                         engine: str = "snapshot"):
+                         engine: str = "snapshot",
+                         policy: HHPolicy | None = None):
     """Multi-source block-parallel PoRC (§V-C distributed sources).
 
     The stream splits round-robin across ``n_sources`` sources (message
@@ -452,32 +788,48 @@ def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
     themselves realign per call, the same alignment caveat as
     ``ref_porc_route``.
 
+    ``policy`` (snapshot engine only) turns on heavy-hitter-aware probe
+    depths (D/W-Choices): each source classifies keys against its local
+    count-min sketch view and probes with per-key budgets; the sketch
+    shards and delta-merges exactly like the load (see
+    :class:`HHPolicy`). ``policy=None`` — the default — is bit-identical
+    to the policy-free engine.
+
     Returns (assignment [M] int32 in original stream order,
     new MultiSourcePorcState).
     """
     S = n_sources
     if engine not in ("snapshot", "strict"):
         raise ValueError(f"unknown engine {engine!r}")
+    if policy is not None and engine != "snapshot":
+        raise ValueError("HHPolicy requires the snapshot engine")
     if state is None:
-        state = multisource_state_init(n_bins, S)
-    base, delta, routed, ticks = state
+        state = multisource_state_init(n_bins, S, policy)
+    base, delta, routed, ticks, skb, skd = state
+    if policy is not None and skb is None:
+        # state predates the policy: start the sketch cold
+        skb = hh_sketch_init(policy)
+        skd = jnp.zeros((S, policy.depth, policy.width), jnp.float32)
+    if policy is None:
+        skb = skd = None                 # sketch is carried only with it
     per = keys.shape[0] // S             # full per-source span length
     r = keys.shape[0] - per * S
     parts = []
     off = 0
     for _, length, blk in block_spans(per, block):
         span = keys[off: off + length * S]
-        a, base, delta, ticks = _porc_multisource_scan(
+        a, base, delta, ticks, skb, skd = _porc_multisource_scan(
             span, n_bins, S, sync_every, blk, eps, chunk, engine,
-            base, delta, ticks)
+            base, delta, ticks, skb, skd, policy)
         routed = routed + length * S
         parts.append(a)
         off += length * S
     if r:
         keys_pad = jnp.concatenate(
             [keys[off:], jnp.zeros((S - r,), keys.dtype)])
-        a, base, delta = _porc_multisource_tail(
-            keys_pad, n_bins, S, eps, chunk, base, delta, jnp.float32(r))
+        a, base, delta, skb, skd = _porc_multisource_tail(
+            keys_pad, n_bins, S, eps, chunk, base, delta, jnp.float32(r),
+            skb, skd, policy)
         routed = routed + r
         ticks = jnp.zeros_like(ticks)    # tail publish = a merge
         parts.append(a[:r])
@@ -486,18 +838,25 @@ def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
     else:
         assign = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
     return assign, MultiSourcePorcState(base=base, delta=delta,
-                                        routed=routed, ticks=ticks)
+                                        routed=routed, ticks=ticks,
+                                        sketch_base=skb, sketch_delta=skd)
 
 
 def multisource_merge(state: MultiSourcePorcState) -> MultiSourcePorcState:
     """Force a synchronization: publish every source's delta into the
     base (e.g. at a monitoring-slot boundary, where the paper's
-    piggybacked signals all arrive) and restart the sync phase."""
+    piggybacked signals all arrive) and restart the sync phase. The
+    sketch lanes, when present, merge the same way (the sketch is
+    linear, so this is exact)."""
     return MultiSourcePorcState(
         base=state.base + state.delta.sum(0),
         delta=jnp.zeros_like(state.delta),
         routed=state.routed,
-        ticks=jnp.zeros_like(state.ticks))
+        ticks=jnp.zeros_like(state.ticks),
+        sketch_base=(None if state.sketch_base is None
+                     else state.sketch_base + state.sketch_delta.sum(0)),
+        sketch_delta=(None if state.sketch_delta is None
+                      else jnp.zeros_like(state.sketch_delta)))
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,13 @@ class CGRequestRouter:
     ``max_moves_per_rebalance``, and busy/idle signals latch between
     separate enter/exit occupancy levels with a dwell so a replica
     hovering at ``queue_hi`` stops flapping. See ``docs/tuning.md``.
+
+    ``hh_scheme`` ("d"/"w") turns on heavy-hitter-aware probe depths
+    (D/W-Choices): a device-resident count-min sketch rides the routing
+    state, hot session/tenant keys get up to ``d_heavy`` (or all-VW)
+    probe choices while the tail keeps ``d_tail`` — bounding per-key
+    replica fan-out and queue imbalance at once. Off ("") routes
+    bit-identically to the policy-free engine. See docs/partitioners.md.
     """
     n_replicas: int
     alpha: int = 8
@@ -86,10 +93,31 @@ class CGRequestRouter:
     queue_exit_margin: float = 0.1  # busy exits below queue_hi-margin,
                                   # idle exits above queue_lo+margin
     dwell: int = 3                # ticks a raw signal must persist
+    hh_scheme: str = ""           # heavy-hitter probe policy: "" = off
+                                  # (bit-identical to the plain engine),
+                                  # "d" = D-Choices, "w" = W-Choices
+                                  # ("DCHOICES"/"WCHOICES" also accepted)
+    sketch_depth: int = 4         # count-min rows
+    sketch_width: int = 4096      # count-min columns per row
+    hot_fraction: float = 1e-3    # heavy when est >= fraction of routed
+    d_heavy: int = 32             # heavy-key probe ceiling under "d"
+    d_tail: int = 2               # tail-key probe budget
+    hh_headroom: float = 2.0      # schedule slack over the Eq.-2 spread
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
-        self._state = multisource_state_init(self.n_virtual, self.n_sources)
+        if self.hh_scheme:
+            from repro.core.cg import _hh_letter
+            from repro.kernels.ref import HHPolicy
+            self._policy = HHPolicy(
+                scheme=_hh_letter(self.hh_scheme), depth=self.sketch_depth,
+                width=self.sketch_width, hot_fraction=self.hot_fraction,
+                d_heavy=self.d_heavy, d_tail=self.d_tail,
+                headroom=self.hh_headroom)
+        else:
+            self._policy = None
+        self._state = multisource_state_init(self.n_virtual, self.n_sources,
+                                             policy=self._policy)
         self._routed = 0
         self.moves = 0
         self._dcfg = delegation.DelegationConfig(
@@ -175,6 +203,16 @@ class CGRequestRouter:
         # restore that only seeds the loads; assign ``routed`` after
         # this to override the clock explicitly.
         self.routed = int(value.sum())
+        if self._policy is not None:
+            # a load restore carries no key frequencies: rescale the
+            # carried sketch so its mass matches the restored clock and
+            # the est/mass heavy classification stays calibrated
+            mass = float(self._state.sketch_base.sum()) / max(
+                self._policy.depth, 1)
+            f = jnp.float32(self._routed / max(mass, 1.0))
+            self._state = self._state._replace(
+                sketch_base=self._state.sketch_base * f,
+                sketch_delta=jnp.zeros_like(self._state.sketch_delta))
 
     @property
     def routed(self) -> int:
@@ -199,6 +237,7 @@ class CGRequestRouter:
         stale = max(self.block_size, 1) * self.n_sources * self.sync_every
         if (1.0 + self.eps) * self._routed / self.n_virtual + stale < 2 ** 23:
             return
+        old_routed = self._routed
         shift = float(jnp.min(self._state.base + self._state.delta.sum(0)))
         self._routed -= int(shift * self.n_virtual)
         self._rebalance_mark -= int(shift * self.n_virtual)
@@ -206,6 +245,14 @@ class CGRequestRouter:
             base=self._state.base - shift,
             routed=jnp.float32(self._routed))
         self._rated_load = self._rated_load - shift   # keep deltas exact
+        if self._policy is not None and old_routed > 0:
+            # the sketch counts absolute messages and would hit the same
+            # f32 +1.0 ceiling; scale it with the clock so the est/mass
+            # heavy classification is unchanged
+            f = jnp.float32(self._routed / old_routed)
+            self._state = self._state._replace(
+                sketch_base=self._state.sketch_base * f,
+                sketch_delta=self._state.sketch_delta * f)
 
     def route(self, key: int) -> int:
         """PoRC over virtual replicas (Alg. 1), then owner lookup.
@@ -213,8 +260,12 @@ class CGRequestRouter:
         Pure-python sequential oracle — ``route_batch`` with
         ``block_size=1`` is bit-identical to a sequence of these calls.
         Lane deltas are flushed first (a forced sync), so the probe
-        chain sees the true global load.
+        chain sees the true global load. With a heavy-hitter policy the
+        oracle doesn't exist (probe budgets are sketch-defined), so the
+        request routes through the batch path as a block of one.
         """
+        if self._policy is not None:
+            return int(self.route_batch(np.asarray([key], np.int32))[0])
         self._maybe_rebase()
         if self.n_sources > 1 or self.sync_every > 1:
             state = multisource_merge(self._state)    # flush lane deltas
@@ -249,7 +300,7 @@ class CGRequestRouter:
         assign_vw, self._state = ref_porc_multisource(
             jnp.asarray(keys), self.n_virtual, self.n_sources,
             sync_every=self.sync_every, block=self.block_size,
-            eps=self.eps, state=self._state)
+            eps=self.eps, state=self._state, policy=self._policy)
         self._routed += len(keys)
         # owner gather on device — the owner map never leaves it
         return np.asarray(jnp.take(self._dstate.vw_owner,

@@ -94,3 +94,24 @@ def test_greedy_d_imbalance_decreases_in_d(d, seed):
     id_ = float(metrics.normalized_imbalance(
         P.greedy_d(keys, n, d=d, on_message_id=True), caps))
     assert id_ <= i1 + 1e-6
+
+
+@given(st.integers(2, 6), st.integers(64, 512), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hh_sketch_recall_property(depth, width, seed):
+    """∀ zipf streams and sketch geometries: count-min never
+    underestimates, and the top key is always recalled as heavy once the
+    stream mass clears the collision noise (≤ m/width per row)."""
+    from repro.core.streams import sample_zipf_stream
+    from repro.kernels.ref import (HHPolicy, hh_sketch_init,
+                                   hh_sketch_query, hh_sketch_update)
+    m = 4096
+    keys = sample_zipf_stream(jax.random.PRNGKey(seed), m, 2000, 1.5)
+    pol = HHPolicy(depth=depth, width=width)
+    counts = hh_sketch_update(pol, hh_sketch_init(pol), keys)
+    uniq, true = np.unique(np.asarray(keys), return_counts=True)
+    est = np.asarray(hh_sketch_query(pol, counts, jnp.asarray(uniq)))
+    assert (est >= true).all()
+    assert (est <= true + m / width + 1e-6).all()
+    top = int(np.argmax(true))
+    assert est[top] >= true[top] >= m / 50      # the head is unmissable

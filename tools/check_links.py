@@ -5,7 +5,10 @@ Scans README.md, ROADMAP.md and everything under docs/ for markdown
 links/images ``[text](target)`` and verifies that every relative target
 (optionally carrying a ``#anchor``) exists on disk, resolved against
 the file that contains it. External schemes (http/https/mailto) and
-pure in-page anchors are skipped. Exit code 1 lists every broken link.
+pure in-page anchors are skipped. A small REQUIRED list also pins the
+docs CI actually depends on (the tuning + partitioner playbooks) so a
+rename can't silently drop them from the scan. Exit code 1 lists every
+broken link.
 
   python tools/check_links.py        # from the repo root (CI does this)
 """
@@ -19,6 +22,10 @@ LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 SKIP = ("http://", "https://", "mailto:", "#")
 
 ROOT = Path(__file__).resolve().parent.parent
+
+# docs that must exist AND be scanned — the playbooks other docs,
+# benchmarks and CI gate messages point readers at
+REQUIRED = ("docs/tuning.md", "docs/partitioners.md")
 
 
 def iter_docs():
@@ -52,10 +59,13 @@ def check(path: Path) -> list[str]:
 
 
 def main() -> int:
-    broken, n_files = [], 0
+    broken, n_files, seen = [], 0, set()
     for doc in iter_docs():
         n_files += 1
+        seen.add(str(doc.relative_to(ROOT)))
         broken.extend(check(doc))
+    broken.extend(f"{req}: required doc missing"
+                  for req in REQUIRED if req not in seen)
     for b in broken:
         print(b)
     print(f"checked {n_files} markdown files: "
