@@ -1,0 +1,197 @@
+"""Failure benchmark — latency *during* replica death and migration.
+
+Kill-1-of-8 replicas mid-stream under a hot-key shift, with KV-cache-
+like keyed session state (hundreds of KB per request, tens of MB per
+virtual replica). The interesting number is not the settled latency
+after everything re-converges but the transient while it happens: the
+heartbeat detection window, the evacuation (capacity-proportional via
+``delegation.evacuate``), and the at-least-once retries of the
+stranded queue all show up as served-request latency measured in
+engine *steps* (deterministic — no wall-clock flakiness in CI).
+
+Gates (the ISSUE acceptance criteria, asserted in ``run``):
+
+* **zero lost** — submitted == served after drain, nothing in flight,
+  ``dropped == 0`` (at-least-once accounting balances);
+* **graceful degradation** — settled mean latency ≤ 1.5× the
+  pre-failure mean;
+* **defaults-off parity** — the failure machinery armed but idle
+  (empty chaos schedule, heartbeats on, ramp on) is bit-identical to
+  the plain engine: same owner-map trajectory, queue depths and moves.
+
+The byte-budget variant replays the same scenario with
+``byte_budget_per_rebalance`` + ``min_gain_per_byte`` on, recording how
+migration metering changes bytes moved — informational, compared via
+``benchmarks/compare.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime.chaos import ChaosSchedule
+from repro.serve.engine import CGRequestRouter, ServingEngine
+
+from .common import fmt, record, table
+
+N = 8
+MAX_BATCH = 8
+LOAD = 48                      # offered req/step (util 0.75 of 8×8)
+STATE_BYTES = 256 * 1024.0     # KV-cache-like per-request session state
+WINDOW = 25                    # steps per latency measurement window
+
+
+def _drive(eng, steps, *, seed=0, shift_at=None):
+    """Offered load: zipf keys, hot set shifting identity at
+    ``shift_at``. Returns per-step cumulative served-latency counts so
+    phases can be sliced out afterwards."""
+    rng = np.random.default_rng(seed)
+    marks = []
+    for step in range(steps):
+        keys = rng.zipf(1.25, size=LOAD).astype(np.int64) % 4096
+        if shift_at is not None and step >= shift_at:
+            keys = (keys + 1777) % 4096
+        eng.submit_batch(keys.astype(np.int32), list(keys))
+        eng.step()
+        marks.append(len(eng.latency_steps))
+    return marks
+
+
+def _window_mean(lat, marks, lo_step, hi_step):
+    """Mean/p99 latency (steps) of requests *served* in [lo, hi)."""
+    lo = marks[lo_step - 1] if lo_step > 0 else 0
+    hi = marks[hi_step - 1] if hi_step <= len(marks) else len(lat)
+    seg = np.asarray(lat[lo:hi])
+    if len(seg) == 0:
+        return float("nan"), float("nan")
+    return float(seg.mean()), float(np.percentile(seg, 99))
+
+
+def _scenario(steps, chaos, *, byte_budget=0.0, min_gain=0.0, seed=0):
+    router = CGRequestRouter(
+        N, capacity_weighted=True, adaptive_moves=True, hysteresis=True,
+        state_bytes_per_request=STATE_BYTES,
+        byte_budget_per_rebalance=byte_budget,
+        min_gain_per_byte=min_gain)
+    eng = ServingEngine(
+        [lambda b: b for _ in range(N)], router, max_batch=MAX_BATCH,
+        chaos=chaos, heartbeat_timeout_steps=2, retry_backoff_steps=1,
+        readmit_ramp_steps=20)
+    marks = _drive(eng, steps, seed=seed, shift_at=steps // 2)
+    # drain everything still in flight so the accounting can balance
+    drain = 0
+    while eng.in_flight > 0 and drain < 1000:
+        eng.step()
+        drain += 1
+    return eng, router, marks
+
+
+def _kill_one(steps, kill_at, recover_at):
+    eng, router, marks = _scenario(
+        steps, ChaosSchedule.kill_one(3, at=kill_at, recover_at=recover_at))
+    served = sum(r.served for r in eng.replicas)
+    lost = eng.submitted - served - eng.in_flight
+    pre, pre99 = _window_mean(eng.latency_steps, marks,
+                              kill_at - WINDOW, kill_at)
+    dur, dur99 = _window_mean(eng.latency_steps, marks,
+                              kill_at, kill_at + WINDOW)
+    settled, settled99 = _window_mean(eng.latency_steps, marks,
+                                      steps - WINDOW, steps)
+    ratio = settled / max(pre, 1e-9)
+    rows = [["pre-failure", fmt(pre, 2), fmt(pre99, 1)],
+            ["during failure", fmt(dur, 2), fmt(dur99, 1)],
+            ["settled", fmt(settled, 2), fmt(settled99, 1)]]
+    print(table(f"kill-1-of-{N} at step {kill_at} (recover {recover_at}, "
+                "hot-key shift mid-run): served-request latency in steps",
+                ["phase", "mean", "p99"], rows))
+    print(f"accounting: submitted {eng.submitted} = served {served} + "
+          f"in-flight {eng.in_flight} (lost {lost}, retried {eng.retried}, "
+          f"dropped {eng.dropped}); evacuations {eng.evacuations}, "
+          f"moves {router.moves}, bytes moved "
+          f"{router.bytes_moved / 2**20:.1f} MiB")
+    record("failures", section="kill_one",
+           pre_mean_latency_steps=pre, during_mean_latency_steps=dur,
+           during_p99_latency_steps=dur99,
+           settled_mean_latency_steps=settled,
+           settled_over_pre=ratio, lost=int(lost), retried=eng.retried,
+           evacuations=eng.evacuations, moves=router.moves,
+           bytes_moved=router.bytes_moved)
+    return lost, eng.in_flight, eng.dropped, ratio
+
+
+def _byte_budget_variant(steps):
+    """Migration metering under a *slowdown* (the pure rebalance path —
+    no mandatory evacuation): one replica drops to quarter speed and
+    the capacity-weighted engine wants to shed its VWs. With per-request
+    state accrual the rate/bytes ratio is nearly uniform across VWs, so
+    the cost-benefit floor acts as a veto: the metered run refuses to
+    drag ~100 MiB of session state for marginal queue relief — the
+    arXiv:1610.05121 argument that a migration must amortize its
+    transfer before it is worth executing."""
+    chaos_at = steps // 4
+    rows, out = [], {}
+    for name, bb, mg in (("unmetered", 0.0, 0.0),
+                         ("metered", 4 * STATE_BYTES, 2e-7)):
+        eng, router, marks = _scenario(
+            steps, ChaosSchedule.slowdown(0, at=chaos_at, factor=4.0),
+            byte_budget=bb, min_gain=mg)
+        served = sum(r.served for r in eng.replicas)
+        lost = eng.submitted - served - eng.in_flight
+        settled, _ = _window_mean(eng.latency_steps, marks,
+                                  steps - WINDOW, steps)
+        out[name] = (lost, router.bytes_moved)
+        record("failures", section="byte_budget", scheme=name,
+               bytes_moved=router.bytes_moved, moves=router.moves,
+               settled_mean_latency_steps=settled, lost=int(lost))
+        rows.append([name, fmt(router.bytes_moved / 2**20, 1),
+                     router.moves, fmt(settled, 2), int(lost)])
+    print(table("migration metering (byte budget + min gain/byte) under "
+                "a 4x slowdown of replica 0",
+                ["config", "MiB moved", "moves", "settled lat", "lost"],
+                rows))
+    return out
+
+
+def _parity(steps=60):
+    """Armed-but-idle failure machinery ≡ plain engine, bit-for-bit."""
+    def run(**kw):
+        router = CGRequestRouter(N, capacity_weighted=True,
+                                 adaptive_moves=True, hysteresis=True)
+        eng = ServingEngine([lambda b: b for _ in range(N)], router,
+                            max_batch=MAX_BATCH, **kw)
+        rng = np.random.default_rng(5)
+        traj = []
+        for _ in range(steps):
+            keys = rng.zipf(1.25, size=LOAD).astype(np.int64) % 4096
+            eng.submit_batch(keys.astype(np.int32), list(keys))
+            eng.step()
+            traj.append((tuple(np.asarray(router.vw_owner)),
+                         tuple(eng.queue_depths()), router.moves))
+        return traj
+
+    plain = run()
+    armed = run(chaos=ChaosSchedule([]), heartbeat_timeout_steps=3,
+                retry_backoff_steps=2, readmit_ramp_steps=10)
+    return plain == armed
+
+
+def run(quick: bool = False):
+    steps = 90 if quick else 150
+    kill_at, recover_at = steps // 3, 2 * steps // 3
+    lost, in_flight, dropped, ratio = _kill_one(steps, kill_at, recover_at)
+    _byte_budget_variant(steps)
+    parity = _parity()
+    print(f"gates: lost {lost} (target 0), settled/pre latency "
+          f"{ratio:.2f}x (target ≤ 1.5x), defaults-off parity {parity}")
+    record("failures", section="gate", lost=int(lost),
+           settled_over_pre=ratio, parity=parity)
+    assert lost == 0 and in_flight == 0 and dropped == 0, (
+        f"at-least-once accounting broken: lost={lost} "
+        f"in_flight={in_flight} dropped={dropped}")
+    assert ratio <= 1.5, (
+        f"settled latency {ratio:.2f}x pre-failure mean (target ≤ 1.5x)")
+    assert parity, ("armed-but-idle failure machinery diverged from the "
+                    "plain serving engine")
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -31,6 +31,9 @@ _METRICS = {
     "settle_adaptive", "settle_best_static", "flash_flap_ratio",
     "flash_moves_ratio", "alpha10_flap_ratio",
     "repl_bound", "ms_parity",
+    "pre_mean_latency_steps", "during_mean_latency_steps",
+    "during_p99_latency_steps", "settled_mean_latency_steps",
+    "settled_over_pre", "lost", "retried", "evacuations", "bytes_moved",
 }
 
 

@@ -18,9 +18,10 @@ import time
 import jax
 
 from . import (bench_deployment, bench_dynamic, bench_epsilon,
-               bench_heterogeneous, bench_hh_probing, bench_moe_router,
-               bench_porc_schemes, bench_queue, bench_schemes_workers,
-               bench_sources, bench_virtual_workers, common, roofline)
+               bench_failures, bench_heterogeneous, bench_hh_probing,
+               bench_moe_router, bench_porc_schemes, bench_queue,
+               bench_schemes_workers, bench_sources, bench_virtual_workers,
+               common, roofline)
 
 ALL = [
     ("porc_schemes", bench_porc_schemes),      # Fig 4 + block-path gate
@@ -35,6 +36,8 @@ ALL = [
                                                # the delegation runtime
     ("hh_probing", bench_hh_probing),          # D/W-Choices skew sweep
                                                # (arXiv:1510.05714)
+    ("failures", bench_failures),              # kill-1-of-8 chaos +
+                                               # migration-cost metering
     ("moe_router", bench_moe_router),          # beyond paper
     ("roofline", roofline),                    # §Roofline
 ]

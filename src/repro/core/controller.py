@@ -55,6 +55,12 @@ class ControllerConfig(NamedTuple):
     hysteresis: bool = False       # latch signals between enter/exit
     dwell: int = 3                 # consecutive over-enter slots before
                                    # a new signal latches
+    # --- migration-cost cap ---
+    byte_budget: float = 0.0       # max VW state bytes one slot may
+                                   # migrate (0 = unmetered); divided by
+                                   # the caller's ``unit_bytes`` (bytes
+                                   # one move transfers) to cap the
+                                   # emitted move budget
 
 
 class ControllerState(NamedTuple):
@@ -82,7 +88,8 @@ def init_controller(cfg: ControllerConfig) -> ControllerState:
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def controller_step(cfg: ControllerConfig, state: ControllerState,
                     pressure, depths, unit,
-                    enter_busy, exit_busy, enter_idle, exit_idle):
+                    enter_busy, exit_busy, enter_idle, exit_idle,
+                    unit_bytes=None):
     """One monitoring-slot tick of the controller.
 
     Args:
@@ -98,6 +105,12 @@ def controller_step(cfg: ControllerConfig, state: ControllerState,
         busy until pressure falls below exit_busy.
       enter_idle/exit_idle: scalars, exit_idle >= enter_idle,
         symmetrically.
+      unit_bytes: optional f32 scalar — the state bytes one move
+        migrates (e.g. the mean per-VW state size). With
+        ``cfg.byte_budget > 0`` the emitted budget is additionally
+        capped at ``byte_budget / unit_bytes`` (floored, but never
+        below 1 so a starved budget cannot wedge the engine); None or
+        ``byte_budget=0`` leaves the budget purely move-count-driven.
 
     Returns ``(new_state, busy [n] bool, idle [n] bool, budget i32)``;
     feed ``busy``/``idle``/``budget`` straight into
@@ -133,6 +146,10 @@ def controller_step(cfg: ControllerConfig, state: ControllerState,
                           cfg.min_moves, cfg.max_moves)
     else:
         budget = jnp.full((), cfg.max_moves, jnp.int32)
+    if cfg.byte_budget > 0 and unit_bytes is not None:
+        fit = jnp.floor(cfg.byte_budget / jnp.maximum(
+            jnp.asarray(unit_bytes, jnp.float32), 1e-9)).astype(jnp.int32)
+        budget = jnp.minimum(budget, jnp.maximum(fit, 1))
 
     new_state = ControllerState(
         depth_ewma=depth_ewma,
@@ -171,11 +188,11 @@ class DelegationController:
                    enter_idle=theta_idle,
                    exit_idle=theta_idle + margin)
 
-    def step(self, pressure, depths, unit=1.0):
+    def step(self, pressure, depths, unit=1.0, unit_bytes=None):
         self.state, busy, idle, budget = controller_step(
             self.cfg, self.state, pressure, depths, unit,
             self.enter_busy, self.exit_busy,
-            self.enter_idle, self.exit_idle)
+            self.enter_idle, self.exit_idle, unit_bytes)
         return busy, idle, budget
 
     @property

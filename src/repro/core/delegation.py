@@ -43,6 +43,22 @@ Semantics
 * **Device residency.** The owner map, rates and queues are jnp arrays
   threaded through ``rebalance_step`` (fully jit-compiled); callers
   never loop over VWs on the host.
+* **Migration cost (bytes moved).** Flipping the owner map is free only
+  for stateless operators; a stateful VW (keyed session state, KV
+  cache) pays a transfer proportional to its state size
+  (arXiv:1610.05121 makes this the first-class rebalancing term).
+  Passing ``vw_bytes`` ([V] f32 per-VW state sizes) to
+  ``rebalance_step`` turns it on: cumulative bytes moved are tracked in
+  ``DelegationState.bytes_moved``, ``byte_budget_per_slot`` caps the
+  bytes one slot may transfer (moves that would overflow it are
+  skipped, budget left for smaller VWs later in the schedule), and
+  ``min_gain_per_byte`` is the cost-benefit test — a VW only moves if
+  its rate (the traffic relief) amortizes its transfer
+  (``rate ≥ min_gain_per_byte · bytes``). With ``vw_bytes=None`` (the
+  default) or both knobs at 0 the planner is bit-identical to the
+  cost-free engine. ``evacuate`` is the exception: a dead worker's VWs
+  always move (there is no cheaper option than off a corpse), the
+  bytes are accounted but never gated.
 """
 from __future__ import annotations
 
@@ -64,6 +80,11 @@ class DelegationConfig(NamedTuple):
     rate_decay: float = 1.0        # EWMA decay of per-VW rates
                                    # (1.0 = cumulative, the seed behaviour)
     fcfs: bool = False             # carry unpaired signals across slots
+    byte_budget_per_slot: float = 0.0  # max VW state bytes one slot may
+                                   # migrate (0 = unmetered); only
+                                   # effective when vw_bytes is passed
+    min_gain_per_byte: float = 0.0  # cost-benefit: move a VW only if
+                                   # rate ≥ this · its state bytes
 
 
 class PairQueues(NamedTuple):
@@ -79,6 +100,9 @@ class DelegationState(NamedTuple):
     vw_rate: jnp.ndarray      # [V] f32 windowed per-VW arrival rate
     queues: PairQueues
     moves: jnp.ndarray        # []  i32 cumulative executed moves
+    bytes_moved: jnp.ndarray | float = 0.0  # [] f32 cumulative VW state
+                              # bytes migrated (stays 0 unless the
+                              # caller passes vw_bytes)
 
 
 def init_queues(n_workers: int) -> PairQueues:
@@ -98,7 +122,8 @@ def init_state(cfg: DelegationConfig,
         vw_owner=jnp.asarray(vw_owner, jnp.int32),
         vw_rate=jnp.zeros((cfg.n_virtual,), jnp.float32),
         queues=init_queues(cfg.n_workers),
-        moves=jnp.zeros((), jnp.int32))
+        moves=jnp.zeros((), jnp.int32),
+        bytes_moved=jnp.zeros((), jnp.float32))
 
 
 def _enqueue(cfg: DelegationConfig, busy, idle, q: PairQueues):
@@ -168,28 +193,48 @@ def _schedule(cfg: DelegationConfig, busy_rank, idle_rank, shed, absorb):
     return src, dst, n_exec
 
 
-def _execute(cfg: DelegationConfig, vw_owner, vw_rate, src, dst, n_exec):
+def _execute(cfg: DelegationConfig, vw_owner, vw_rate, src, dst, n_exec,
+             vw_bytes=None):
     """Apply the scheduled moves: each move re-homes the source worker's
     highest-rate VW (greatest relief). Sequential because a worker
     shedding k VWs must pick its top-k one at a time as ownership
-    changes under it."""
+    changes under it.
+
+    With ``vw_bytes`` given, moves additionally pay migration cost: a VW
+    is only *eligible* if its rate amortizes its state transfer
+    (``rate ≥ min_gain_per_byte · bytes``), and a move whose VW would
+    push the slot past ``byte_budget_per_slot`` is skipped (the budget
+    is left for smaller VWs later in the schedule). Skipped moves don't
+    count as executed. ``vw_bytes=None`` compiles the cost-free path.
+    """
     n = cfg.n_workers
     neg_inf = jnp.float32(-jnp.inf)
+    metered = vw_bytes is not None
+    if metered:
+        vw_bytes = jnp.asarray(vw_bytes, jnp.float32)
+        eligible_vw = vw_rate >= cfg.min_gain_per_byte * vw_bytes
 
     def body(j, carry):
-        owner, done, served_src, served_dst = carry
+        owner, done, served_src, served_dst, nbytes = carry
         s, d = src[j], dst[j]
         owned = owner == s
-        v = jnp.argmax(jnp.where(owned, vw_rate, neg_inf))
-        can = (j < n_exec) & jnp.any(owned)
+        cand = owned & eligible_vw if metered else owned
+        v = jnp.argmax(jnp.where(cand, vw_rate, neg_inf))
+        can = (j < n_exec) & jnp.any(cand)
+        if metered and cfg.byte_budget_per_slot > 0:
+            can = can & (nbytes + vw_bytes[v] <= cfg.byte_budget_per_slot)
         owner = owner.at[v].set(jnp.where(can, d, owner[v]).astype(owner.dtype))
         step = can.astype(jnp.int32)
+        if metered:
+            nbytes = nbytes + jnp.where(can, vw_bytes[v], 0.0)
         return (owner, done + step,
-                served_src.at[s].add(step), served_dst.at[d].add(step))
+                served_src.at[s].add(step), served_dst.at[d].add(step),
+                nbytes)
 
     zeros = jnp.zeros((n,), jnp.int32)
-    return jax.lax.fori_loop(0, cfg.max_moves_per_slot, body,
-                             (vw_owner, jnp.int32(0), zeros, zeros))
+    return jax.lax.fori_loop(
+        0, cfg.max_moves_per_slot, body,
+        (vw_owner, jnp.int32(0), zeros, zeros, jnp.zeros((), jnp.float32)))
 
 
 def seed_pairing_reference(n, max_moves, vw_load, vw_owner, util,
@@ -221,7 +266,7 @@ def seed_pairing_reference(n, max_moves, vw_load, vw_owner, util,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
-               busy, idle, budget=None):
+               busy, idle, budget=None, unit_bytes=None):
     """Pairing-only entry point (no owner map): returns the (src, dst)
     move schedule with unit budgets, for callers that execute moves
     themselves (e.g. the straggler balancer moving pipeline shards).
@@ -234,6 +279,11 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
       budget: optional i32 scalar — this slot's move budget (e.g. from
         ``controller.controller_step``), clamped by
         ``max_moves_per_slot``; None keeps the static budget.
+      unit_bytes: optional f32 scalar — the state bytes one move
+        transfers (callers without per-VW accounting use the mean shard
+        state size). With ``cfg.byte_budget_per_slot > 0`` the pair
+        count is clamped so ``n_pairs · unit_bytes`` stays within the
+        byte budget; None skips the byte clamp.
 
     Returns (src [M] i32, dst [M] i32, n_pairs i32, new PairQueues);
     only the first ``n_pairs`` schedule entries are valid.
@@ -247,6 +297,11 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
     src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
     if budget is not None:
         n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
+    if unit_bytes is not None and cfg.byte_budget_per_slot > 0:
+        fit = jnp.floor(cfg.byte_budget_per_slot
+                        / jnp.maximum(jnp.asarray(unit_bytes, jnp.float32),
+                                      1e-9)).astype(jnp.int32)
+        n_exec = jnp.minimum(n_exec, jnp.maximum(fit, 0))
     lt = jnp.arange(cfg.max_moves_per_slot, dtype=jnp.int32) < n_exec
     served_src = jnp.zeros((cfg.n_workers,), jnp.int32).at[src].add(
         lt.astype(jnp.int32))
@@ -260,7 +315,8 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
-                   busy, idle, vw_arrivals, capacities, budget=None):
+                   busy, idle, vw_arrivals, capacities, budget=None,
+                   vw_bytes=None):
     """One monitoring-slot tick of the full engine.
 
     Updates the windowed VW rates from this slot's arrivals, admits the
@@ -279,6 +335,11 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
         static ``max_moves_per_slot`` stays the hard ceiling (schedule
         arrays are sized by it); None keeps the static budget, which is
         bit-identical to the pre-controller engine.
+      vw_bytes: optional [V] f32 per-VW state sizes — turns on
+        migration-cost accounting: ``byte_budget_per_slot`` caps the
+        bytes this slot migrates and ``min_gain_per_byte`` gates each
+        move on rate/bytes (see ``_execute``). None (the default) is
+        bit-identical to the cost-free engine.
 
     Returns (new DelegationState, n_moved i32).
     """
@@ -298,8 +359,8 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
     src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
     if budget is not None:
         n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
-    owner, n_done, served_src, served_dst = _execute(
-        cfg, state.vw_owner, rate, src, dst, n_exec)
+    owner, n_done, served_src, served_dst, n_bytes = _execute(
+        cfg, state.vw_owner, rate, src, dst, n_exec, vw_bytes)
     # fully-served workers leave their queue; partially-served ones keep
     # their FCFS position for the next slot (budgets are re-derived from
     # fresh rates each slot, only membership carries over).
@@ -309,5 +370,64 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
         vw_owner=owner,
         vw_rate=rate,
         queues=PairQueues(busy_since, idle_since, state.queues.slot + 1),
-        moves=state.moves + n_done)
+        moves=state.moves + n_done,
+        bytes_moved=state.bytes_moved + n_bytes)
     return new_state, n_done
+
+
+def evacuate(vw_owner, vw_rate, dead, capacities, vw_bytes=None):
+    """Re-home every VW owned by the ``dead`` worker(s) onto survivors,
+    capacity-proportionally — the shared dead-replica shedding path
+    (serve-side replica death and train-side host loss both land here).
+
+    A dead worker is a capacity→0 event: its target share is zero, so
+    *all* of its VWs must move this instant, unmetered (no
+    ``max_moves_per_slot`` pacing, no byte budget — the state transfer
+    is mandatory, only accounted). VWs are assigned hottest-first to the
+    survivor with the largest remaining rate *deficit* against its
+    capacity-proportional share, so the evacuated traffic lands where
+    the spare capacity is instead of round-robin.
+
+    Host-side NumPy on purpose: failure is a rare event and the greedy
+    deficit loop is data-dependent; the steady-state path stays the
+    jitted ``rebalance_step``.
+
+    Args:
+      vw_owner: [V] int owner map (any array-like; not mutated).
+      vw_rate: [V] f32 per-VW rates (the delegation engine's).
+      dead: int or sequence of ints — the worker(s) being evacuated.
+      capacities: [n] f32 service-rate estimates; dead entries ignored.
+      vw_bytes: optional [V] f32 per-VW state sizes for the bytes-moved
+        accounting.
+
+    Returns ``(new_owner [V] np.int32, n_moved int, bytes_moved float)``.
+    """
+    owner = np.array(vw_owner, np.int32)
+    rate = np.asarray(vw_rate, np.float64)
+    if rate.sum() <= 0:
+        rate = np.ones_like(rate)             # cold engine: balance counts
+    n = len(np.asarray(capacities))
+    dead = np.atleast_1d(np.asarray(dead, np.int64))
+    alive = np.ones(n, bool)
+    alive[dead] = False
+    if not alive.any():
+        return owner, 0, 0.0                  # nowhere to go: no-op
+    caps = np.where(alive, np.asarray(capacities, np.float64), 0.0)
+    if caps.sum() <= 0:
+        caps = alive.astype(np.float64)       # degenerate: uniform
+    evac = np.flatnonzero(np.isin(owner, dead))
+    if len(evac) == 0:
+        return owner, 0, 0.0
+    # survivors' deficit against their capacity-proportional share of
+    # the *whole* rate (the dead workers' traffic has to land somewhere)
+    rate_w = np.bincount(owner, weights=np.maximum(rate, 0.0), minlength=n)
+    target = caps / caps.sum() * rate_w.sum()
+    deficit = np.where(alive, target - rate_w, -np.inf)
+    order = evac[np.argsort(-rate[evac], kind="stable")]   # hottest first
+    for v in order:
+        d = int(np.argmax(deficit))
+        owner[v] = d
+        deficit[d] -= max(float(rate[v]), 1e-9)
+    bytes_moved = (float(np.asarray(vw_bytes, np.float64)[evac].sum())
+                   if vw_bytes is not None else 0.0)
+    return owner, len(evac), bytes_moved

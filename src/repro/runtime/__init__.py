@@ -1,2 +1,4 @@
-from .fault_tolerance import FaultTolerantRunner, FTConfig, plan_remesh  # noqa: F401
+from .chaos import ChaosEvent, ChaosSchedule  # noqa: F401
+from .fault_tolerance import (FaultTolerantRunner, FTConfig,  # noqa: F401
+                              VWStateMigrator, plan_remesh)
 from .straggler import DelegationBalancer, StragglerConfig  # noqa: F401

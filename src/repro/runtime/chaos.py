@@ -1,0 +1,128 @@
+"""Fault injection — seeded, scripted failure schedules.
+
+The paper's premise is that worker capacities must be *inferred* at run
+time; the most violent capacity change is a worker dying (capacity→0)
+or coming back (0→capacity, which must be re-admitted gradually or the
+owner map flaps). This module scripts exactly those events so the
+serving engine and the heterogeneous benchmarks can rehearse them
+deterministically:
+
+* ``ChaosEvent`` — one scripted fault: a replica **crash** (process
+  stops serving and heartbeating; the monitor detects it by heartbeat
+  expiry), a **slow**-down (service capacity divided by ``factor`` —
+  the cpulimit'ed workers of Fig 15, injected mid-run), or a
+  **recover** (process returns, subject to the engine's re-admission
+  ramp).
+* ``ChaosSchedule`` — an ordered event list consumed step by step via
+  ``pop_due``. Anything exposing ``pop_due(step) -> list[ChaosEvent]``
+  can be handed to ``ServingEngine(chaos=...)`` — the engine never
+  imports this module, so schedules compose freely in tests.
+
+Schedules are data, not randomness: ``ChaosSchedule.random`` *derives*
+a script from a seed once, after which the run is exactly repeatable —
+the same property the deterministically-seeded pipeline shards give
+restart-after-failure replays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+KINDS = ("crash", "slow", "recover")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    step: int          # engine step the event fires at (1-based ticks)
+    kind: str          # "crash" | "slow" | "recover"
+    replica: int
+    factor: float = 1.0   # slowdown divisor for "slow" (2.0 = half speed)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r}; "
+                             f"use one of {KINDS}")
+
+
+class ChaosSchedule:
+    """Ordered fault script. ``pop_due`` hands out events whose step has
+    arrived (each at most once); ``reset`` rewinds for a fresh run over
+    the same scenario."""
+
+    def __init__(self, events=()):
+        self.events: list[ChaosEvent] = sorted(events, key=lambda e: e.step)
+        self._i = 0
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self.events)
+
+    def reset(self) -> None:
+        self._i = 0
+
+    def pop_due(self, step: int) -> list[ChaosEvent]:
+        due = []
+        while (self._i < len(self.events)
+               and self.events[self._i].step <= step):
+            due.append(self.events[self._i])
+            self._i += 1
+        return due
+
+    # -- scenario constructors -------------------------------------------
+    @classmethod
+    def kill_one(cls, replica: int, at: int,
+                 recover_at: int | None = None) -> "ChaosSchedule":
+        """The canonical kill-1-of-N scenario: crash ``replica`` at step
+        ``at``, optionally bring it back at ``recover_at``."""
+        events = [ChaosEvent(at, "crash", replica)]
+        if recover_at is not None:
+            if recover_at <= at:
+                raise ValueError("recover_at must come after the crash")
+            events.append(ChaosEvent(recover_at, "recover", replica))
+        return cls(events)
+
+    @classmethod
+    def slowdown(cls, replica: int, at: int, factor: float,
+                 recover_at: int | None = None) -> "ChaosSchedule":
+        """Divide ``replica``'s service capacity by ``factor`` from step
+        ``at`` (a mid-run cpulimit), optionally restoring it later."""
+        events = [ChaosEvent(at, "slow", replica, factor=factor)]
+        if recover_at is not None:
+            events.append(ChaosEvent(recover_at, "recover", replica))
+        return cls(events)
+
+    @classmethod
+    def random(cls, seed: int, n_replicas: int, n_steps: int, *,
+               p_crash: float = 0.002, mean_downtime: int = 20,
+               p_slow: float = 0.0, slow_factor: float = 4.0,
+               mean_slowtime: int = 20) -> "ChaosSchedule":
+        """A seeded random script: at most one replica is down at a time
+        (crash→delayed recovery loops), independent slowdown episodes on
+        the others. Derived once from ``seed`` — re-running the schedule
+        replays the identical fault sequence."""
+        rng = np.random.default_rng(seed)
+        events: list[ChaosEvent] = []
+        down_until = 0
+        slow_until = np.zeros(n_replicas, np.int64)
+        for step in range(1, n_steps + 1):
+            if step >= down_until and rng.random() < p_crash:
+                r = int(rng.integers(n_replicas))
+                dt = max(1, int(rng.exponential(mean_downtime)))
+                events.append(ChaosEvent(step, "crash", r))
+                events.append(ChaosEvent(min(step + dt, n_steps),
+                                         "recover", r))
+                down_until = step + dt
+            if p_slow > 0:
+                for r in range(n_replicas):
+                    if step >= slow_until[r] and rng.random() < p_slow:
+                        dt = max(1, int(rng.exponential(mean_slowtime)))
+                        events.append(ChaosEvent(step, "slow", r,
+                                                 factor=slow_factor))
+                        events.append(ChaosEvent(min(step + dt, n_steps),
+                                                 "recover", r))
+                        slow_until[r] = step + dt
+        return cls(events)

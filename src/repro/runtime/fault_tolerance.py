@@ -10,23 +10,43 @@ Posture for 1000+ nodes (DESIGN.md §5):
   consistency rule at step granularity).
 
 * **Elastic re-mesh.** When a host is lost *between* checkpoints, its
-  pipeline shards (virtual workers) are re-paired onto surviving idle
-  hosts using the CG FCFS queues — the global batch keeps flowing at
-  reduced capacity instead of stalling the fleet. When the host pool
-  changes durably, ``plan_remesh`` picks the largest (data × model)
-  mesh that fits the survivors and the checkpoint is resharded on load
-  (restore is sharding-agnostic: leaves are host numpy arrays).
+  pipeline shards (virtual workers) are re-paired onto surviving hosts
+  through the shared delegation engine (``delegation.plan_pairs`` — the
+  same pairing the serving router and the straggler balancer use): the
+  dead host raises a permanent busy signal, survivors are ranked idle
+  by projected shards-per-capacity, and one paired move executes per
+  planning round until the dead host owns nothing. Shards therefore
+  land **capacity-proportionally** — a 3× host absorbs ~3× the shards —
+  not round-robin. When the host pool changes durably, ``plan_remesh``
+  picks the largest (data × model) mesh that fits the survivors and the
+  checkpoint is resharded on load (restore is sharding-agnostic: leaves
+  are host numpy arrays).
 
 * **Failure detection** here is heartbeat-based (hosts report each
   step); on real fleets this is the TPU runtime's job — the interface
-  (`on_failure`) is the part that matters.
+  (`on_failure`) is the part that matters. ``on_failure`` is the single
+  dead-marking path: heartbeat expiry and direct calls take the same
+  route and it is idempotent (a host already marked dead is not
+  evacuated twice).
+
+* **Stateful VW migration.** ``VWStateMigrator`` moves a virtual
+  worker's keyed state through the atomic checkpointer: ``transfer``
+  round-trips the state via a committed ``.tmp``→rename checkpoint, so
+  a crash mid-migration can never corrupt it — re-mesh and rebalance
+  share this one migration path (hand the migrator to
+  ``ServingEngine(migrator=...)``).
 """
 from __future__ import annotations
 
+import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+import jax
+import numpy as np
 
 from repro.checkpoint import checkpointer as ckpt
+from repro.core import delegation
 
 from .straggler import DelegationBalancer
 
@@ -46,48 +66,84 @@ class HostState:
 
 
 class FaultTolerantRunner:
-    """Wraps a train loop with checkpoint/restart + elastic response."""
+    """Wraps a train loop with checkpoint/restart + elastic response.
 
-    def __init__(self, cfg: FTConfig, n_hosts: int, pipeline=None):
+    ``capacities`` (optional [n_hosts] floats) are the service-rate
+    estimates the evacuation planner weighs survivors by; None means
+    uniform (shards spread evenly, the pre-capacity behaviour — but
+    still deficit-ranked, not round-robin).
+    """
+
+    def __init__(self, cfg: FTConfig, n_hosts: int, pipeline=None,
+                 capacities=None):
         self.cfg = cfg
         self.hosts = [HostState(time.monotonic()) for _ in range(n_hosts)]
         self.pipeline = pipeline
+        self.capacities = (np.ones(n_hosts) if capacities is None
+                           else np.asarray(capacities, np.float64))
         self.balancer = DelegationBalancer(n_hosts)
         self.saver = ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.max_keep)
         self.failures: list[tuple[float, int]] = []
+        # pairing-only delegation config for evacuation planning: one
+        # move per planning round (loads are re-projected after every
+        # shard lands), no FCFS carry-over (each round is a fresh plan)
+        self._evac_cfg = delegation.DelegationConfig(
+            n_workers=n_hosts, n_virtual=0, max_moves_per_slot=1)
 
     # -- liveness ---------------------------------------------------------
     def heartbeat(self, host: int) -> None:
         self.hosts[host].last_heartbeat = time.monotonic()
 
-    def check_failures(self) -> list[int]:
+    def check_failures(self, timeout_s: float | None = None) -> list[int]:
+        """Declare hosts whose heartbeat is older than ``timeout_s``
+        (default: the config's) dead. Marking + evacuation happen in
+        ``on_failure`` — the one path both detection routes share."""
+        timeout = (self.cfg.heartbeat_timeout_s if timeout_s is None
+                   else timeout_s)
         now = time.monotonic()
-        dead = []
-        for i, h in enumerate(self.hosts):
-            if h.alive and now - h.last_heartbeat > self.cfg.heartbeat_timeout_s:
-                h.alive = False
-                dead.append(i)
+        dead = [i for i, h in enumerate(self.hosts)
+                if h.alive and now - h.last_heartbeat > timeout]
         for d in dead:
             self.on_failure(d)
         return dead
 
     def on_failure(self, host: int) -> list[tuple[int, int]]:
         """Elastic response: re-pair the dead host's virtual shards onto
-        surviving hosts (CG pairing — removal paired with addition)."""
-        self.failures.append((time.monotonic(), host))
+        surviving hosts through ``delegation.plan_pairs`` (removal paired
+        with addition), capacity-proportionally. Idempotent — a host
+        already marked dead returns [] without re-evacuating."""
+        if not self.hosts[host].alive:
+            return []
         self.hosts[host].alive = False
-        moved = []
-        if self.pipeline is not None:
-            survivors = [i for i, h in enumerate(self.hosts) if h.alive]
-            if survivors:
-                i = 0
-                while True:
-                    dst = survivors[i % len(survivors)]
-                    sid = self.pipeline.move_shard(host, dst)
-                    if sid is None:
-                        break
-                    moved.append((sid, dst))
-                    i += 1
+        self.failures.append((time.monotonic(), host))
+        moved: list[tuple[int, int]] = []
+        if self.pipeline is None:
+            return moved
+        alive = np.asarray([h.alive for h in self.hosts])
+        if not alive.any():
+            return moved
+        caps = np.where(alive, np.maximum(self.capacities, 1e-9), 1e-9)
+        queues = delegation.init_queues(len(self.hosts))
+        # only the host being evacuated signals busy (earlier casualties
+        # already shed their shards); every survivor signals idle and the
+        # planner picks the least-pressured one each round
+        busy = np.zeros(len(self.hosts), bool)
+        busy[host] = True
+        while True:
+            counts = np.bincount(self.pipeline.shard_owner,
+                                 minlength=len(self.hosts)).astype(float)
+            # the dead host reads as infinitely pressured (it must shed
+            # everything); survivors rank idle by projected load share,
+            # so each shard lands on the largest remaining deficit
+            pressure = np.where(alive, counts / caps, 1e9)
+            src, dst, n_exec, queues = delegation.plan_pairs(
+                self._evac_cfg, queues, pressure, busy, alive)
+            if int(n_exec) == 0:
+                break
+            sid = self.pipeline.move_shard(int(src[0]), int(dst[0]))
+            if sid is None:
+                break
+            moved.append((sid, int(dst[0])))
         return moved
 
     # -- checkpointing ----------------------------------------------------
@@ -103,6 +159,81 @@ class FaultTolerantRunner:
         if s is None:
             return 0, None
         return s, ckpt.restore(self.cfg.ckpt_dir, s, like)
+
+
+class VWStateMigrator:
+    """Per-VW state transfer through the atomic checkpointer.
+
+    Each virtual worker's keyed state (session maps, KV-cache pages)
+    lives under ``<root>/vw_<id>/`` as a versioned checkpoint; ``put``
+    commits a new version (``.tmp``→rename, crash-safe) and ``transfer``
+    performs the migration a rebalance or evacuation decided: the
+    committed bytes are re-read at the destination — the round-trip
+    *is* the state movement, and its cost is what
+    ``DelegationConfig.byte_budget_per_slot`` meters.
+
+    ``bytes_moved``/``transfers`` are the accounting the failure
+    benchmarks read; ``state_bytes`` feeds the router's per-VW byte
+    accounting (``CGRequestRouter.vw_state_bytes``).
+    """
+
+    def __init__(self, root_dir: str):
+        self.root = root_dir
+        self._version: dict[int, int] = {}
+        self._nbytes: dict[int, float] = {}
+        self.transfers: list[tuple[int, int, int]] = []   # (vw, src, dst)
+        self.bytes_moved = 0.0
+
+    def _dir(self, vw: int) -> str:
+        return os.path.join(self.root, f"vw_{vw}")
+
+    @staticmethod
+    def _tree_bytes(tree) -> float:
+        return float(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
+
+    def put(self, vw: int, tree) -> None:
+        """Commit a new version of ``vw``'s state (atomic)."""
+        v = self._version.get(vw, 0) + 1
+        ckpt.save(self._dir(vw), v, tree, max_keep=2)
+        self._version[vw] = v
+        self._nbytes[vw] = self._tree_bytes(tree)
+
+    def get(self, vw: int, like=None):
+        """Latest committed state of ``vw`` (None if never put). ``like``
+        defaults to the last tree shape put for this VW."""
+        v = ckpt.latest_step(self._dir(vw))
+        if v is None:
+            return None
+        if like is None:
+            like = ckpt.restore(self._dir(vw), v,
+                                self._like_from_manifest(vw, v))
+            return like
+        return ckpt.restore(self._dir(vw), v, like)
+
+    def _like_from_manifest(self, vw: int, v: int):
+        import json
+        d = os.path.join(self._dir(vw), f"step_{v:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            m = json.load(f)
+        return [np.zeros(s, np.dtype(t))
+                for s, t in zip(m["shapes"], m["dtypes"])]
+
+    def state_bytes(self, vw: int) -> float:
+        return self._nbytes.get(vw, 0.0)
+
+    def transfer(self, vw: int, src: int, dst: int) -> float:
+        """Move ``vw``'s state from ``src`` to ``dst``: re-commit the
+        latest version through the atomic path and account the bytes.
+        A VW with no state is a free (stateless) move."""
+        v = ckpt.latest_step(self._dir(vw))
+        moved = 0.0
+        if v is not None:
+            tree = self.get(vw)
+            self.put(vw, tree)          # destination's committed copy
+            moved = self._nbytes.get(vw, 0.0)
+            self.bytes_moved += moved
+        self.transfers.append((vw, src, dst))
+        return moved
 
 
 def plan_remesh(n_alive_chips: int, model_parallel: int = 16) -> tuple[int, int]:

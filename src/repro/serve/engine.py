@@ -16,6 +16,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import numpy as np
 
@@ -26,12 +27,26 @@ from repro.kernels.ref import (multisource_merge, multisource_state_init,
 import jax.numpy as jnp
 
 
+class Request(NamedTuple):
+    """One queued request. ``t``/``step`` are the *original* submit
+    time/tick — retries keep them, so latency always measures from first
+    submission (failures make requests slower, never younger)."""
+    t: float          # wall-clock submit time (monotonic)
+    step: int         # engine tick at submit
+    key: int          # routing key (needed to re-route on retry)
+    payload: object
+    attempts: int = 0  # completed re-routes (0 = first delivery)
+
+
 @dataclass
 class ReplicaState:
     queue: deque = field(default_factory=deque)
     served: int = 0
     busy_signal: bool = False
     idle_signal: bool = False
+    alive: bool = True            # process up: serving and heartbeating
+    slow_factor: float = 1.0      # service capacity divisor (chaos
+                                  # "slow"; 1.0 = nominal)
 
 
 @dataclass
@@ -103,6 +118,13 @@ class CGRequestRouter:
     d_heavy: int = 32             # heavy-key probe ceiling under "d"
     d_tail: int = 2               # tail-key probe budget
     hh_headroom: float = 2.0      # schedule slack over the Eq.-2 spread
+    state_bytes_per_request: float = 0.0  # per-request keyed-state
+                                  # growth (KV-cache-like); > 0 turns on
+                                  # per-VW state-size accounting
+    byte_budget_per_rebalance: float = 0.0  # max VW state bytes one
+                                  # rebalance may migrate (0 = unmetered)
+    min_gain_per_byte: float = 0.0  # cost-benefit: move a VW only if
+                                  # its rate ≥ this · its state bytes
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
@@ -124,7 +146,16 @@ class CGRequestRouter:
             n_workers=self.n_replicas, n_virtual=self.n_virtual,
             max_moves_per_slot=self.max_moves_per_rebalance,
             capacity_weighted=self.capacity_weighted,
-            rate_decay=self.rate_decay, fcfs=True)
+            rate_decay=self.rate_decay, fcfs=True,
+            byte_budget_per_slot=self.byte_budget_per_rebalance,
+            min_gain_per_byte=self.min_gain_per_byte)
+        # per-VW state sizes (bytes) — None until the caller assigns
+        # vw_state_bytes or state_bytes_per_request starts accruing them;
+        # None keeps the rebalance path bit-identical to the cost-free
+        # engine.
+        self._vw_bytes: np.ndarray | None = (
+            np.zeros(self.n_virtual, np.float64)
+            if self.state_bytes_per_request > 0 else None)
         self._dstate = delegation.init_state(
             self._dcfg,
             vw_owner=jnp.repeat(jnp.arange(self.n_replicas, dtype=jnp.int32),
@@ -144,7 +175,8 @@ class CGRequestRouter:
                     min_moves=self.min_moves,
                     max_moves=self.max_moves_per_rebalance,
                     depth_decay=self.depth_decay,
-                    hysteresis=self.hysteresis, dwell=self.dwell),
+                    hysteresis=self.hysteresis, dwell=self.dwell,
+                    byte_budget=self.byte_budget_per_rebalance),
                 theta_busy=self.queue_hi, theta_idle=self.queue_lo,
                 margin=self.queue_exit_margin)
         else:
@@ -176,6 +208,50 @@ class CGRequestRouter:
     def vw_owner(self, value) -> None:
         self._dstate = self._dstate._replace(
             vw_owner=jnp.asarray(value, jnp.int32))
+
+    @property
+    def vw_state_bytes(self) -> np.ndarray | None:
+        """Per-VW keyed-state sizes (bytes), or None when state-size
+        accounting is off. Assign an [V] array to seed it (e.g. from a
+        ``VWStateMigrator``'s measured tree sizes); assigning None turns
+        accounting back off."""
+        return None if self._vw_bytes is None else self._vw_bytes.copy()
+
+    @vw_state_bytes.setter
+    def vw_state_bytes(self, value) -> None:
+        if value is None:
+            self._vw_bytes = None
+            return
+        value = np.asarray(value, np.float64)
+        if value.shape != (self.n_virtual,):
+            raise ValueError(f"vw_state_bytes must be [{self.n_virtual}]")
+        self._vw_bytes = value.copy()
+
+    @property
+    def bytes_moved(self) -> float:
+        """Cumulative VW state bytes migrated (rebalance + evacuation)."""
+        return float(self._dstate.bytes_moved)
+
+    def evacuate(self, replica: int, capacities=None) -> tuple[int, float]:
+        """Shed *everything* the dead replica owns, capacity-
+        proportionally onto the survivors — the capacity→0 limit of the
+        delegation engine (``delegation.evacuate``), not round-robin.
+        Unmetered: byte budgets never gate an evacuation (the transfer
+        is mandatory), bytes are only accounted. Returns
+        ``(n_moved, bytes_moved)``."""
+        caps = (np.ones(self.n_replicas, np.float64) if capacities is None
+                else np.asarray(capacities, np.float64))
+        new_owner, n_moved, nbytes = delegation.evacuate(
+            np.asarray(self._dstate.vw_owner),
+            np.asarray(self._dstate.vw_rate), replica, caps,
+            vw_bytes=self._vw_bytes)
+        if n_moved:
+            self._dstate = self._dstate._replace(
+                vw_owner=jnp.asarray(new_owner, jnp.int32),
+                moves=self._dstate.moves + jnp.int32(n_moved),
+                bytes_moved=self._dstate.bytes_moved + jnp.float32(nbytes))
+            self.moves += n_moved
+        return n_moved, nbytes
 
     @property
     def vw_load(self) -> np.ndarray:
@@ -282,6 +358,8 @@ class CGRequestRouter:
         if load[vw] >= cap:
             vw = int(np.argmin(load))
         load[vw] += 1
+        if self._vw_bytes is not None and self.state_bytes_per_request > 0:
+            self._vw_bytes[vw] += self.state_bytes_per_request
         self._state = state._replace(
             base=jnp.asarray(load, jnp.float32),
             routed=jnp.float32(self._routed))
@@ -302,6 +380,10 @@ class CGRequestRouter:
             sync_every=self.sync_every, block=self.block_size,
             eps=self.eps, state=self._state, policy=self._policy)
         self._routed += len(keys)
+        if self._vw_bytes is not None and self.state_bytes_per_request > 0:
+            # keyed session state grows where the requests land
+            self._vw_bytes += self.state_bytes_per_request * np.bincount(
+                np.asarray(assign_vw).ravel(), minlength=self.n_virtual)
         # owner gather on device — the owner map never leaves it
         return np.asarray(jnp.take(self._dstate.vw_owner,
                                    jnp.asarray(assign_vw)))
@@ -349,7 +431,10 @@ class CGRequestRouter:
             unit = max((self._routed - self._rebalance_mark)
                        / max(self.n_virtual, 1), 1.0)
             self._rebalance_mark = self._routed
-            busy_j, idle_j, budget_j = self._controller.step(p, d, unit)
+            ub = (None if self._vw_bytes is None
+                  else max(float(self._vw_bytes.mean()), 1.0))
+            busy_j, idle_j, budget_j = self._controller.step(
+                p, d, unit, unit_bytes=ub)
             busy_mask, idle_mask = np.asarray(busy_j), np.asarray(idle_j)
             budget = budget_j if self.adaptive_moves else None
             if (not busy_mask.any() and not self._queued_busy) or (
@@ -377,10 +462,12 @@ class CGRequestRouter:
         load = self._state.base + self._state.delta.sum(0)   # device
         caps = (jnp.ones(n, jnp.float32) if capacities is None
                 else jnp.asarray(capacities, jnp.float32))
+        vb = (None if self._vw_bytes is None
+              else jnp.asarray(self._vw_bytes, jnp.float32))
         self._dstate, moved = delegation.rebalance_step(
             self._dcfg, self._dstate, jnp.asarray(p),
             jnp.asarray(busy_mask), jnp.asarray(idle_mask),
-            load - self._rated_load, caps, budget)
+            load - self._rated_load, caps, budget, vb)
         self._rated_load = load
         q = self._dstate.queues
         self._queued_busy = bool(jnp.any(q.busy_since != delegation.NOT_QUEUED))
@@ -392,48 +479,256 @@ class CGRequestRouter:
 
 class ServingEngine:
     """Queue-per-replica engine. ``replica_fns`` map a batch of request
-    payloads to outputs; service speed differences model heterogeneity."""
+    payloads to outputs; service speed differences model heterogeneity.
+
+    Failure awareness (all knobs default off = bit-identical to the
+    failure-oblivious engine):
+
+    * **Liveness.** Replicas heartbeat every tick while their process is
+      up (``ReplicaState.alive``); with ``heartbeat_timeout_steps > 0``
+      a replica whose heartbeat is that many ticks stale is *declared*
+      dead by the monitor — until then requests keep landing on its
+      queue (the detection window the failure benchmarks measure). With
+      the timeout at 0, an injected crash is declared the same tick.
+    * **Evacuation.** Declaring a replica dead sheds all its virtual
+      replicas capacity-proportionally onto survivors through the
+      shared delegation engine (``router.evacuate`` — capacity→0, not
+      round-robin) and re-routes every request stranded on its queue.
+    * **At-least-once retries.** Stranded requests go to a retry queue
+      with exponential backoff (``retry_backoff_steps · 2^attempts``
+      ticks, capped) and re-route through the normal submit path with
+      their *original* submit time — nothing is ever silently dropped:
+      ``submitted == served + in_flight`` at every tick (``dropped``
+      exists only to pin that contract at 0).
+    * **Re-admission ramp.** A recovered replica re-enters with its
+      effective capacity scaled by ``readmit_floor`` ramping linearly to
+      1 over ``readmit_ramp_steps`` ticks, so the capacity-weighted
+      budgets hand its share back gradually instead of flapping the
+      owner map.
+    * **Chaos.** ``chaos`` is any object with
+      ``pop_due(step) -> events`` (``repro.runtime.chaos``): "crash"
+      calls :meth:`fail_replica`, "slow" divides the replica's drain
+      rate, "recover" calls :meth:`recover_replica`.
+    * **Stateful migration.** ``migrator`` (e.g.
+      ``repro.runtime.fault_tolerance.VWStateMigrator``) receives a
+      ``transfer(vw, src, dst)`` call for every owner-map change —
+      rebalance and evacuation share that one migration path.
+    """
 
     def __init__(self, replica_fns, router: CGRequestRouter | None = None,
-                 max_batch: int = 8):
+                 max_batch: int = 8, *, chaos=None,
+                 heartbeat_timeout_steps: int = 0,
+                 retry_backoff_steps: int = 1,
+                 max_retry_backoff_steps: int = 8,
+                 request_timeout_steps: int = 0,
+                 readmit_ramp_steps: int = 0,
+                 readmit_floor: float = 0.05,
+                 migrator=None):
+        n = len(replica_fns)
         self.replicas = [ReplicaState() for _ in replica_fns]
         self.fns = list(replica_fns)
-        self.router = router or CGRequestRouter(len(replica_fns))
+        self.router = router or CGRequestRouter(n)
         self.max_batch = max_batch
         self.latencies: list[float] = []
+        self.latency_steps: list[int] = []   # tick-latency of each served
+                                             # request (deterministic)
         # per-replica capacity estimate from served/queue telemetry
         # (EWMA of requests actually drained per tick while there was
         # work) — what the delegation engine's capacity-weighted
         # budgets consume; replicas never reveal capacities directly.
         self.capacity_estimates = np.full(len(self.fns), float(max_batch))
+        # -- failure-awareness state --
+        self.chaos = chaos
+        self.heartbeat_timeout_steps = heartbeat_timeout_steps
+        self.retry_backoff_steps = retry_backoff_steps
+        self.max_retry_backoff_steps = max_retry_backoff_steps
+        self.request_timeout_steps = request_timeout_steps
+        self.readmit_ramp_steps = readmit_ramp_steps
+        self.readmit_floor = readmit_floor
+        self.migrator = migrator
+        self.step_idx = 0
+        self.submitted = 0
+        self.retried = 0
+        self.dropped = 0              # the at-least-once contract: 0
+        self.evacuations = 0
+        self.failures: list[tuple[int, int]] = []   # (step, replica)
+        self._retry: deque[tuple[int, Request]] = deque()  # (ready, req)
+        self._dead = np.zeros(n, bool)       # declared by the monitor
+        self._beating = np.ones(n, bool)
+        self._last_beat = np.zeros(n, np.int64)
+        self._readmit = np.ones(n, np.float64)
 
+    # -- request intake ---------------------------------------------------
     def submit(self, key: int, payload) -> None:
         """Single-request submit — routed through the batch path (a
         batch of one is one block of one, i.e. exact Alg. 1)."""
         self.submit_batch(np.asarray([key], np.int32), [payload])
 
     def submit_batch(self, keys: np.ndarray, payloads) -> None:
-        assign = self.router.route_batch(np.asarray(keys, np.int32))
+        keys = np.asarray(keys, np.int32)
+        assign = self.router.route_batch(keys)
         now = time.monotonic()
-        for r, p in zip(assign, payloads):
-            self.replicas[int(r)].queue.append((now, p))
+        self.submitted += len(keys)
+        for r, k, p in zip(assign, keys, payloads):
+            self.replicas[int(r)].queue.append(
+                Request(now, self.step_idx, int(k), p))
 
+    @property
+    def in_flight(self) -> int:
+        """Requests accepted but not yet served (replica queues + the
+        retry queue). ``submitted == served + in_flight`` always."""
+        return sum(len(r.queue) for r in self.replicas) + len(self._retry)
+
+    # -- failure / recovery ----------------------------------------------
+    def fail_replica(self, i: int) -> None:
+        """Crash-stop replica ``i``: it stops serving and heartbeating
+        *now*; the monitor declares it dead (evacuation + re-routes)
+        immediately, or after ``heartbeat_timeout_steps`` stale ticks
+        when heartbeat detection is on."""
+        rep = self.replicas[i]
+        if not rep.alive:
+            return
+        rep.alive = False
+        self._beating[i] = False
+        self.failures.append((self.step_idx, i))
+        if self.heartbeat_timeout_steps <= 0:
+            self._declare_dead(i)
+
+    def recover_replica(self, i: int) -> None:
+        """Replica ``i``'s process returns: heartbeats resume and, if it
+        had been declared dead, its capacity re-admits through the ramp
+        (it owns no virtual replicas until delegation hands some back)."""
+        rep = self.replicas[i]
+        rep.alive = True
+        rep.slow_factor = 1.0
+        self._beating[i] = True
+        self._last_beat[i] = self.step_idx
+        was_declared = bool(self._dead[i])
+        self._dead[i] = False
+        if was_declared and self.readmit_ramp_steps > 0:
+            self._readmit[i] = self.readmit_floor
+
+    def _declare_dead(self, i: int) -> None:
+        """Monitor verdict: evacuate VWs through the delegation engine
+        and re-route every request stranded on the dead queue."""
+        if self._dead[i]:
+            return
+        self._dead[i] = True
+        rep = self.replicas[i]
+        stranded = len(rep.queue)
+        while rep.queue:
+            self._schedule_retry(rep.queue.popleft())
+        self.retried += stranded
+        before = (self.router.vw_owner if self.migrator is not None
+                  else None)
+        self.router.evacuate(i, self._effective_capacities())
+        self._migrate_owner_changes(before)
+        self.evacuations += 1
+
+    def _schedule_retry(self, req: Request) -> None:
+        """Exponential backoff, capped; the request keeps its original
+        submit time/tick so failure cost shows up as latency, and its
+        attempt count so repeated failures back off harder. Never drops."""
+        back = min(self.retry_backoff_steps * (2 ** req.attempts),
+                   self.max_retry_backoff_steps)
+        self._retry.append((self.step_idx + max(int(back), 1),
+                            req._replace(attempts=req.attempts + 1)))
+
+    def _drain_retries(self) -> None:
+        ready = [r for t, r in self._retry if t <= self.step_idx]
+        if not ready:
+            return
+        self._retry = deque((t, r) for t, r in self._retry
+                            if t > self.step_idx)
+        assign = self.router.route_batch(
+            np.asarray([r.key for r in ready], np.int32))
+        for a, req in zip(assign, ready):
+            rep = self.replicas[int(a)]
+            if rep.alive or not self._dead[int(a)]:
+                rep.queue.append(req)
+            else:
+                self._schedule_retry(req)    # landed on a corpse: back off
+                self.retried += 1
+
+    def _effective_capacities(self) -> np.ndarray:
+        """The capacity estimates the delegation engine sees: declared-
+        dead replicas collapse to ~0 (they shed everything), recovering
+        ones re-admit through the ramp. With everyone alive and ramped
+        this is exactly the raw estimate (defaults-off parity)."""
+        eff = np.maximum(self.capacity_estimates, 1e-3) * self._readmit
+        eff[self._dead] = 1e-3
+        return eff
+
+    def _check_liveness(self) -> None:
+        if self.heartbeat_timeout_steps <= 0:
+            return
+        for i in range(len(self.replicas)):
+            if self._beating[i]:
+                self._last_beat[i] = self.step_idx
+            elif (not self._dead[i] and self.step_idx - self._last_beat[i]
+                    >= self.heartbeat_timeout_steps):
+                self._declare_dead(i)
+
+    def _migrate_owner_changes(self, before: np.ndarray | None) -> None:
+        if self.migrator is None or before is None:
+            return
+        after = self.router.vw_owner
+        for v in np.flatnonzero(before != after):
+            self.migrator.transfer(int(v), int(before[v]), int(after[v]))
+
+    def apply_chaos(self, ev) -> None:
+        if ev.kind == "crash":
+            self.fail_replica(ev.replica)
+        elif ev.kind == "slow":
+            self.replicas[ev.replica].slow_factor = float(ev.factor)
+        elif ev.kind == "recover":
+            self.recover_replica(ev.replica)
+        else:
+            raise ValueError(f"unknown chaos event kind {ev.kind!r}")
+
+    # -- the engine tick ---------------------------------------------------
     def step(self) -> int:
-        """One engine tick: each replica serves up to max_batch requests,
-        then delegation signals fire and the router re-pairs busy↔idle
-        in severity order (most-overloaded with most-idle, §V-B) using
-        queue occupancy as the pressure signal."""
+        """One engine tick: chaos events fire, the liveness monitor
+        runs, due retries re-route, each live replica serves up to
+        max_batch requests, then delegation signals fire and the router
+        re-pairs busy↔idle in severity order (most-overloaded with
+        most-idle, §V-B) using queue occupancy as the pressure signal."""
+        self.step_idx += 1
+        if self.chaos is not None:
+            for ev in self.chaos.pop_due(self.step_idx):
+                self.apply_chaos(ev)
+        self._check_liveness()
+        self._drain_retries()
         served = 0
+        now = time.monotonic()
         occupancy = np.zeros(len(self.replicas), np.float32)
         for i, (rep, fn) in enumerate(zip(self.replicas, self.fns)):
+            if not rep.alive:
+                # a crashed process serves nothing; once declared dead
+                # its (empty) queue reads as full pressure so it stays
+                # latched busy — shedding, never absorbing
+                occupancy[i] = (1.0 if self._dead[i]
+                                else len(rep.queue) / self.router.max_queue)
+                rep.busy_signal = occupancy[i] > self.router.queue_hi
+                rep.idle_signal = False
+                continue
+            if self.request_timeout_steps > 0:
+                while rep.queue and (self.step_idx - rep.queue[0].step
+                                     > self.request_timeout_steps):
+                    self._schedule_retry(rep.queue.popleft())
+                    self.retried += 1
             had_work = bool(rep.queue)
+            cap = max(1, int(round(self.max_batch / max(rep.slow_factor,
+                                                        1e-9))))
             batch = []
-            while rep.queue and len(batch) < self.max_batch:
+            while rep.queue and len(batch) < cap:
                 batch.append(rep.queue.popleft())
             if batch:
-                fn([p for _, p in batch])
+                fn([r.payload for r in batch])
                 now = time.monotonic()
-                self.latencies.extend(now - t for t, _ in batch)
+                self.latencies.extend(now - r.t for r in batch)
+                self.latency_steps.extend(self.step_idx - r.step
+                                          for r in batch)
                 rep.served += len(batch)
                 served += len(batch)
             # only *saturated* ticks reveal capacity: a full batch, or a
@@ -442,22 +737,32 @@ class ServingEngine:
             # queue measures demand, not capacity — folding it in would
             # rank a fast lightly-loaded replica *below* an overloaded
             # one and invert the capacity-weighted budgets.
-            if had_work and (len(batch) == self.max_batch or rep.queue):
+            if had_work and (len(batch) == cap or rep.queue):
                 self.capacity_estimates[i] = (
                     0.7 * self.capacity_estimates[i] + 0.3 * len(batch))
             occ = len(rep.queue) / self.router.max_queue
             occupancy[i] = occ
             rep.busy_signal = occ > self.router.queue_hi
             rep.idle_signal = occ < self.router.queue_lo
+        # re-admission ramp: recovered replicas earn their share back
+        below = self._readmit < 1.0
+        if below.any() and self.readmit_ramp_steps > 0:
+            alive = np.asarray([r.alive for r in self.replicas])
+            self._readmit[below & alive] = np.minimum(
+                1.0, self._readmit[below & alive]
+                + 1.0 / self.readmit_ramp_steps)
         busy = [i for i, r in enumerate(self.replicas) if r.busy_signal]
         idle = [i for i, r in enumerate(self.replicas) if r.idle_signal]
         # with the adaptive controller on, every tick must reach the
         # router so the hysteresis latches and depth EWMA stay current
         if busy or idle or self.router.controller_active:
+            before = (self.router.vw_owner if self.migrator is not None
+                      else None)
             self.router.rebalance(
                 busy, idle, pressure=occupancy,
-                capacities=np.maximum(self.capacity_estimates, 1e-3),
+                capacities=self._effective_capacities(),
                 depths=np.asarray(self.queue_depths(), np.float32))
+            self._migrate_owner_changes(before)
         return served
 
     def queue_depths(self) -> list[int]:

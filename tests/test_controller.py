@@ -76,6 +76,31 @@ def test_budget_ewma_smooths_spikes():
     assert int(b0) < 20           # EWMA halves the instantaneous excess
 
 
+def test_byte_budget_caps_emitted_moves():
+    """With byte_budget set and unit_bytes supplied, the emitted budget
+    is floor(byte_budget/unit_bytes), never below 1, and unaffected
+    when either side of the knob is absent."""
+    cfg = C.ControllerConfig(n_workers=4, adaptive_moves=True,
+                             min_moves=1, max_moves=16, depth_decay=0.0,
+                             byte_budget=300.0)
+    st = C.init_controller(cfg)
+    depths = np.array([1e5, 0, 0, 0])       # demand slams to the ceiling
+    st, _, _, b = C.controller_step(cfg, st, jnp.zeros(4), depths, 1.0,
+                                    0.85, 0.80, 0.75, 0.80, 100.0)
+    assert int(b) == 3                      # 300 bytes / 100 per move
+    st, _, _, b = C.controller_step(cfg, st, jnp.zeros(4), depths, 1.0,
+                                    0.85, 0.80, 0.75, 0.80, 1e6)
+    assert int(b) == 1                      # starved budget floors at 1
+    st, _, _, b = C.controller_step(cfg, st, jnp.zeros(4), depths, 1.0,
+                                    0.85, 0.80, 0.75, 0.80, None)
+    assert int(b) == 16                     # no unit_bytes → move-count only
+    cfg0 = cfg._replace(byte_budget=0.0)
+    st0 = C.init_controller(cfg0)
+    _, _, _, b = C.controller_step(cfg0, st0, jnp.zeros(4), depths, 1.0,
+                                   0.85, 0.80, 0.75, 0.80, 100.0)
+    assert int(b) == 16                     # knob off → unmetered
+
+
 def test_rebalance_respects_runtime_budget():
     """The engine executes at most ``budget`` moves even when the
     static ceiling and the eligible pairs allow more."""

@@ -221,6 +221,30 @@ def test_plan_pairs_severity_and_carryover():
     assert int(src[0]) == 0 and int(dst[0]) == 2
 
 
+def test_plan_pairs_byte_clamp():
+    """With a per-slot byte budget and a caller-supplied unit_bytes, the
+    pair count is clamped to the bytes the slot may migrate."""
+    n = 6
+    cfg = D.DelegationConfig(n_workers=n, n_virtual=0,
+                             max_moves_per_slot=4,
+                             byte_budget_per_slot=250.0)
+    pressure = jnp.asarray([3.0, 2.5, 2.0, 0.1, 0.2, 0.3])
+    busy = jnp.asarray([True, True, True, False, False, False])
+    idle = ~busy
+    # 100 bytes per move → floor(250/100) = 2 of the 3 eligible pairs
+    _, _, k, _ = D.plan_pairs(cfg, D.init_queues(n), pressure, busy, idle,
+                              unit_bytes=100.0)
+    assert int(k) == 2
+    # no unit_bytes → byte budget inert, all 3 pairs scheduled
+    _, _, k, _ = D.plan_pairs(cfg, D.init_queues(n), pressure, busy, idle)
+    assert int(k) == 3
+    # budget off → unit_bytes inert too
+    cfg0 = cfg._replace(byte_budget_per_slot=0.0)
+    _, _, k, _ = D.plan_pairs(cfg0, D.init_queues(n), pressure, busy, idle,
+                              unit_bytes=100.0)
+    assert int(k) == 3
+
+
 @pytest.mark.parametrize("capacity_weighted", [False, True])
 def test_random_streams_conserve_population(capacity_weighted):
     rng = np.random.default_rng(3)

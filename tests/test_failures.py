@@ -1,0 +1,295 @@
+"""Failure-aware serving: chaos schedules, at-least-once accounting,
+capacity-proportional evacuation, re-admission ramp, migration cost."""
+import numpy as np
+import pytest
+
+from repro.core import delegation as D
+from repro.runtime.chaos import ChaosEvent, ChaosSchedule
+from repro.serve.engine import CGRequestRouter, ServingEngine
+
+
+def _engine(n=4, router=None, **kw):
+    router = router or CGRequestRouter(n)
+    return ServingEngine([lambda b: b for _ in range(n)], router,
+                         max_batch=8, **kw)
+
+
+def _drive(eng, steps, *, load=24, seed=0, drain=True):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        keys = rng.zipf(1.3, size=load).astype(np.int32) % 512
+        eng.submit_batch(keys, list(keys))
+        eng.step()
+    if drain:
+        for _ in range(500):
+            if eng.in_flight == 0:
+                break
+            eng.step()
+
+
+# -- chaos schedules --------------------------------------------------------
+
+def test_chaos_events_pop_once_in_order():
+    s = ChaosSchedule([ChaosEvent(5, "slow", 1, factor=2.0),
+                       ChaosEvent(3, "crash", 0)])
+    assert s.pop_due(2) == []
+    assert [e.kind for e in s.pop_due(5)] == ["crash", "slow"]
+    assert s.pop_due(5) == []          # each event fires at most once
+    assert s.exhausted
+    s.reset()
+    assert len(s.pop_due(10)) == 2
+
+
+def test_chaos_kind_validated():
+    with pytest.raises(ValueError):
+        ChaosEvent(1, "explode", 0)
+    with pytest.raises(ValueError):
+        ChaosSchedule.kill_one(0, at=10, recover_at=5)
+
+
+def test_chaos_random_is_seed_deterministic():
+    a = ChaosSchedule.random(3, n_replicas=8, n_steps=500, p_crash=0.02)
+    b = ChaosSchedule.random(3, n_replicas=8, n_steps=500, p_crash=0.02)
+    assert a.events == b.events
+    assert len(a) > 0
+    # crash/recover alternate: at most one replica down at a time
+    down = 0
+    for e in a.events:
+        if e.kind == "crash":
+            assert down == 0
+            down += 1
+        elif e.kind == "recover":
+            down = max(0, down - 1)
+
+
+# -- at-least-once accounting ----------------------------------------------
+
+def test_kill_one_loses_nothing():
+    """submitted == served + in_flight at every tick, and a full drain
+    ends with zero in flight, zero dropped."""
+    eng = _engine(8, chaos=ChaosSchedule.kill_one(3, at=10),
+                  heartbeat_timeout_steps=2)
+    rng = np.random.default_rng(1)
+    for _ in range(40):
+        keys = rng.zipf(1.3, size=32).astype(np.int32) % 512
+        eng.submit_batch(keys, list(keys))
+        eng.step()
+        served = sum(r.served for r in eng.replicas)
+        assert eng.submitted == served + eng.in_flight
+    _drive(eng, 0)
+    assert eng.in_flight == 0 and eng.dropped == 0
+    assert eng.retried > 0            # the stranded queue was re-routed
+    assert eng.evacuations == 1
+
+
+def test_immediate_detection_when_timeout_zero():
+    eng = _engine(4)
+    eng.submit_batch(np.arange(16, dtype=np.int32), list(range(16)))
+    eng.fail_replica(1)               # heartbeat_timeout_steps=0
+    assert eng._dead[1]
+    assert len(eng.replicas[1].queue) == 0
+    assert not (np.asarray(eng.router.vw_owner) == 1).any()
+
+
+def test_heartbeat_window_delays_declaration():
+    eng = _engine(4, heartbeat_timeout_steps=3)
+    eng.fail_replica(1)
+    assert not eng._dead[1]           # crashed but not yet declared
+    for _ in range(3):
+        eng.step()
+    assert eng._dead[1]
+    assert eng.evacuations == 1
+
+
+def test_dead_replica_receives_no_assignments():
+    eng = _engine(4, chaos=ChaosSchedule.kill_one(2, at=5))
+    _drive(eng, 30, drain=False)
+    assert len(eng.replicas[2].queue) == 0
+    assert not (np.asarray(eng.router.vw_owner) == 2).any()
+
+
+def test_retry_backoff_is_exponential_and_capped():
+    eng = _engine(4, retry_backoff_steps=2, max_retry_backoff_steps=8)
+    from repro.serve.engine import Request
+    for attempts, want in [(0, 2), (1, 4), (2, 8), (5, 8)]:
+        eng._retry.clear()
+        eng._schedule_retry(Request(0.0, 0, 7, None, attempts=attempts))
+        ready, req = eng._retry[0]
+        assert ready == eng.step_idx + want
+        assert req.attempts == attempts + 1
+
+
+def test_request_timeout_requeues_stuck_requests():
+    eng = _engine(2, request_timeout_steps=2, retry_backoff_steps=1)
+    eng.replicas[0].slow_factor = 1e9          # effectively frozen
+    eng.submit_batch(np.zeros(64, np.int32), list(range(64)))
+    before = eng.retried
+    for _ in range(6):
+        eng.step()
+    assert eng.retried > before
+    served = sum(r.served for r in eng.replicas)
+    assert eng.submitted == served + eng.in_flight   # nothing lost
+
+
+# -- recovery ramp ----------------------------------------------------------
+
+def test_recovery_readmits_through_ramp():
+    eng = _engine(4, heartbeat_timeout_steps=1, readmit_ramp_steps=10,
+                  readmit_floor=0.1)
+    eng.fail_replica(1)
+    eng.step()
+    assert eng._dead[1]
+    eng.recover_replica(1)
+    assert eng._readmit[1] == pytest.approx(0.1)
+    caps = eng._effective_capacities()
+    assert caps[1] == pytest.approx(0.1 * max(eng.capacity_estimates[1],
+                                              1e-3))
+    _drive(eng, 12, drain=False)
+    assert eng._readmit[1] == pytest.approx(1.0)
+
+
+def test_recovered_replica_earns_vws_back():
+    eng = _engine(4, chaos=ChaosSchedule.kill_one(1, at=5, recover_at=15),
+                  readmit_ramp_steps=5)
+    router = eng.router
+    # heavy enough that survivors raise busy signals post-recovery
+    _drive(eng, 60, load=60, drain=False)
+    owner = np.asarray(router.vw_owner)
+    assert (owner == 1).any()         # delegation handed VWs back
+
+
+def test_slowdown_event_shrinks_drain_rate():
+    eng = _engine(2, chaos=ChaosSchedule.slowdown(0, at=1, factor=4.0,
+                                                  recover_at=50))
+    eng.submit_batch(np.zeros(8, np.int32), list(range(8)))
+    eng.step()
+    # slow replica drains max_batch/4 = 2 per tick instead of 8
+    assert eng.replicas[0].slow_factor == 4.0
+    assert eng.replicas[0].served <= 2 + 8  # replica 1 may hold others
+
+
+# -- migration cost on the serving router ----------------------------------
+
+def test_router_accrues_vw_state_bytes():
+    r = CGRequestRouter(4, state_bytes_per_request=100.0)
+    r.route_batch(np.arange(32, dtype=np.int32))
+    assert r.vw_state_bytes is not None
+    assert r.vw_state_bytes.sum() == pytest.approx(3200.0)
+
+
+def test_router_bytes_moved_accounted_on_rebalance():
+    r = CGRequestRouter(4, capacity_weighted=True,
+                        state_bytes_per_request=10.0)
+    eng = _engine(4, router=r)
+    _drive(eng, 40, drain=False)
+    if r.moves > 0:
+        assert r.bytes_moved > 0.0
+
+
+def test_byte_budget_caps_slot_migration():
+    """With a byte budget smaller than one hot VW's state, the metered
+    engine must refuse the move the unmetered engine makes."""
+    n, V = 2, 4
+    cfg = D.DelegationConfig(n_workers=n, n_virtual=V,
+                             byte_budget_per_slot=50.0)
+    st = D.init_state(cfg)
+    vw_bytes = np.full(V, 100.0, np.float32)
+    arrivals = np.asarray([10.0, 0, 0, 0], np.float32)
+    busy = np.asarray([True, False])
+    idle = np.asarray([False, True])
+    new, moved = D.rebalance_step(
+        cfg, st, np.asarray([1.0, 0.0], np.float32), busy, idle,
+        arrivals, np.ones(n, np.float32), None, vw_bytes)
+    assert int(moved) == 0
+    assert float(new.bytes_moved) == 0.0
+    # same scenario unmetered: the move happens
+    cfg0 = cfg._replace(byte_budget_per_slot=0.0)
+    _, moved0 = D.rebalance_step(
+        cfg0, st, np.asarray([1.0, 0.0], np.float32), busy, idle,
+        arrivals, np.ones(n, np.float32))
+    assert int(moved0) == 1
+
+
+def test_min_gain_per_byte_gates_cold_vws():
+    """Cost-benefit: a cold VW with big state must not move; a hot one
+    amortizing its transfer must."""
+    n, V = 2, 4
+    cfg = D.DelegationConfig(n_workers=n, n_virtual=V,
+                             min_gain_per_byte=0.5)
+    st = D.init_state(cfg, vw_owner=np.asarray([0, 0, 1, 1], np.int32))
+    vw_bytes = np.asarray([100.0, 2.0, 100.0, 100.0], np.float32)
+    arrivals = np.asarray([10.0, 5.0, 0.0, 0.0], np.float32)  # vw1: 5 ≥ 1
+    busy = np.asarray([True, False])
+    idle = np.asarray([False, True])
+    new, moved = D.rebalance_step(
+        cfg, st, np.asarray([1.0, 0.0], np.float32), busy, idle,
+        arrivals, np.ones(n, np.float32), None, vw_bytes)
+    assert int(moved) == 1
+    owner = np.asarray(new.vw_owner)
+    assert owner[1] == 1              # the amortizing VW moved
+    assert owner[0] == 0              # the hot-but-heavy one did not
+    assert float(new.bytes_moved) == pytest.approx(2.0)
+
+
+# -- shared evacuation planner ---------------------------------------------
+
+def test_evacuate_capacity_proportional():
+    owner = np.repeat(np.arange(3), 4)           # 4 VWs each
+    rate = np.ones(12, np.float32)
+    new, n_moved, nbytes = D.evacuate(owner, rate, 0, [1.0, 1.0, 3.0])
+    assert n_moved == 4 and nbytes == 0.0
+    counts = np.bincount(new, minlength=3)
+    # targets: 12·(1/4)=3 vs 12·(3/4)=9 → all 4 evacuees go to worker 2
+    assert counts.tolist() == [0, 4, 8]
+
+
+def test_evacuate_accounts_bytes_and_preserves_population():
+    owner = np.repeat(np.arange(4), 2)
+    rate = np.arange(8, dtype=np.float32)
+    vw_bytes = np.full(8, 3.0)
+    new, n_moved, nbytes = D.evacuate(owner, rate, [1, 2],
+                                      np.ones(4), vw_bytes)
+    assert n_moved == 4 and nbytes == pytest.approx(12.0)
+    assert not np.isin(new, [1, 2]).any()
+    assert len(new) == 8
+
+
+def test_evacuate_no_survivors_is_noop():
+    owner = np.zeros(4, np.int32)
+    new, n_moved, nbytes = D.evacuate(owner, np.ones(4), [0], [1.0])
+    assert n_moved == 0 and np.array_equal(new, owner)
+
+
+def test_evacuate_cold_engine_balances_counts():
+    """All-zero rates (nothing routed yet) must still spread the dead
+    worker's VWs capacity-proportionally by count."""
+    owner = np.repeat(np.arange(3), 6)
+    new, n_moved, _ = D.evacuate(owner, np.zeros(18), 0, [1.0, 1.0, 2.0])
+    counts = np.bincount(new, minlength=3)
+    assert n_moved == 6
+    assert counts[2] > counts[1] >= 6
+
+
+# -- defaults-off parity ----------------------------------------------------
+
+def test_armed_but_idle_failure_machinery_is_bit_identical():
+    """With chaos wired but no events firing, the owner-map trajectory,
+    queue depths and move counts must match the plain engine exactly."""
+    def run(**kw):
+        r = CGRequestRouter(4, capacity_weighted=True, adaptive_moves=True,
+                            hysteresis=True)
+        eng = _engine(4, router=r, **kw)
+        rng = np.random.default_rng(11)
+        traj = []
+        for _ in range(60):
+            keys = rng.zipf(1.2, size=24).astype(np.int32) % 256
+            eng.submit_batch(keys, list(keys))
+            eng.step()
+            traj.append((tuple(np.asarray(r.vw_owner)),
+                         tuple(eng.queue_depths()), r.moves))
+        return traj
+
+    plain = run()
+    armed = run(chaos=ChaosSchedule([]), heartbeat_timeout_steps=5,
+                readmit_ramp_steps=10, retry_backoff_steps=2)
+    assert plain == armed

@@ -1,0 +1,179 @@
+"""runtime.fault_tolerance: crash-mid-write atomicity, heartbeat expiry,
+capacity-proportional elastic re-mesh, and the VW state migrator."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.pipeline import PipelineConfig, ShardedTokenPipeline
+from repro.runtime.fault_tolerance import (FaultTolerantRunner, FTConfig,
+                                           VWStateMigrator, plan_remesh)
+
+
+def _pipe(n_hosts=3, per_host=8):
+    return ShardedTokenPipeline(PipelineConfig(
+        vocab=64, seq_len=8, global_batch=24, n_hosts=n_hosts,
+        n_shards_per_host=per_host))
+
+
+def _runner(tmp_path, n_hosts=3, pipeline=None, capacities=None):
+    return FaultTolerantRunner(
+        FTConfig(ckpt_dir=str(tmp_path / "ckpt")), n_hosts,
+        pipeline=pipeline, capacities=capacities)
+
+
+# -- checkpointer atomicity contract (.tmp → rename) -----------------------
+
+def test_crash_mid_write_leaves_latest_committed(tmp_path):
+    """A stale .tmp directory (crash mid-write) must be invisible to
+    latest_step and restore must return the last *committed* tree."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(10, dtype=np.float32)}
+    ckpt.save(d, 10, tree)
+    # simulate a crash after the partial write, before the rename
+    tmp = os.path.join(d, "step_00000020.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        f.write("{ truncated")
+    assert ckpt.latest_step(d) == 10
+    got = ckpt.restore(d, 10, {"w": np.zeros(10, np.float32)})
+    assert np.array_equal(got["w"], tree["w"])
+
+
+def test_recommit_overwrites_stale_tmp(tmp_path):
+    """A retried save at the same step must clobber the stale .tmp and
+    commit cleanly."""
+    d = str(tmp_path / "ckpt")
+    tmp = os.path.join(d, "step_00000010.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "shard_0.npz"), "w") as f:
+        f.write("garbage")
+    tree = {"w": np.full(4, 7.0, np.float32)}
+    ckpt.save(d, 10, tree)
+    assert ckpt.latest_step(d) == 10
+    assert not os.path.exists(tmp)
+    got = ckpt.restore(d, 10, {"w": np.zeros(4, np.float32)})
+    assert np.array_equal(got["w"], tree["w"])
+
+
+def test_runner_restore_latest_roundtrip(tmp_path):
+    ft = _runner(tmp_path)
+    tree = {"p": np.arange(6, dtype=np.float32)}
+    assert ft.maybe_save(50, tree)          # ckpt_every=50
+    assert not ft.maybe_save(51, tree)
+    ft.saver.wait()
+    step, got = ft.restore_latest({"p": np.zeros(6, np.float32)})
+    assert step == 50
+    assert np.array_equal(got["p"], tree["p"])
+
+
+# -- liveness: one marking path, configurable timeout ----------------------
+
+def test_heartbeat_expiry_triggers_remesh(tmp_path):
+    pipe = _pipe()
+    ft = _runner(tmp_path, pipeline=pipe)
+    ft.heartbeat(1)
+    ft.heartbeat(2)
+    ft.hosts[0].last_heartbeat = time.monotonic() - 10.0
+    # per-test timeout override instead of the 300 s config default
+    dead = ft.check_failures(timeout_s=1.0)
+    assert dead == [0]
+    assert not ft.hosts[0].alive
+    assert len(pipe.shards_of(0)) == 0
+    assert [h for _, h in ft.failures] == [0]
+
+
+def test_on_failure_idempotent_single_marking_path(tmp_path):
+    """Direct on_failure and heartbeat-expiry must take the same path:
+    the first call marks + evacuates, any repeat is a no-op."""
+    pipe = _pipe()
+    ft = _runner(tmp_path, pipeline=pipe)
+    moved = ft.on_failure(0)
+    assert len(moved) == 8
+    assert ft.on_failure(0) == []                    # already dead
+    ft.heartbeat(1)
+    ft.heartbeat(2)
+    assert ft.check_failures(timeout_s=1.0) == []    # not re-declared
+    assert len(ft.failures) == 1
+
+
+def test_evacuation_is_capacity_proportional_not_round_robin(tmp_path):
+    """The satellite bugfix: a 3× survivor absorbs the dead host's
+    shards, not an even round-robin split."""
+    pipe = _pipe()
+    ft = _runner(tmp_path, pipeline=pipe, capacities=[1.0, 1.0, 3.0])
+    moved = ft.on_failure(0)
+    counts = np.bincount(pipe.shard_owner, minlength=3)
+    assert counts[0] == 0 and len(moved) == 8
+    # round-robin would give 12/12; capacity-proportional target is
+    # 24·(1/4)=6 vs 24·(3/4)=18 — all 8 evacuated shards go to host 2
+    assert counts.tolist() == [0, 8, 16]
+
+
+def test_evacuation_uniform_capacities_spreads_evenly(tmp_path):
+    pipe = _pipe(n_hosts=4, per_host=4)
+    ft = _runner(tmp_path, n_hosts=4, pipeline=pipe)
+    ft.on_failure(1)
+    counts = np.bincount(pipe.shard_owner, minlength=4)
+    assert counts[1] == 0
+    assert sorted(counts[[0, 2, 3]].tolist()) == [5, 5, 6]
+
+
+def test_cascading_failures_leave_no_orphans(tmp_path):
+    pipe = _pipe()
+    ft = _runner(tmp_path, pipeline=pipe)
+    ft.on_failure(0)
+    ft.on_failure(2)
+    counts = np.bincount(pipe.shard_owner, minlength=3)
+    assert counts.tolist() == [0, 24, 0]
+    # last host down: nowhere to evacuate, but no crash and no orphan move
+    assert ft.on_failure(1) == []
+
+
+# -- plan_remesh ------------------------------------------------------------
+
+@pytest.mark.parametrize("chips,mp,want", [
+    (64, 16, (4, 16)),     # full pool
+    (63, 16, (3, 16)),     # shrink: one chip lost drops a data replica
+    (16, 16, (1, 16)),     # minimum mesh
+    (8, 16, (1, 16)),      # fewer chips than MP degree: clamped floor
+    (96, 16, (6, 16)),     # grow
+])
+def test_plan_remesh_shrink_grow(chips, mp, want):
+    assert plan_remesh(chips, mp) == want
+
+
+# -- VW state migrator ------------------------------------------------------
+
+def test_migrator_roundtrip_and_accounting(tmp_path):
+    mig = VWStateMigrator(str(tmp_path / "mig"))
+    state = {"kv": np.arange(1000, dtype=np.float32)}
+    mig.put(5, state)
+    assert mig.state_bytes(5) == 4000.0
+    moved = mig.transfer(5, src=0, dst=2)
+    assert moved == 4000.0 and mig.bytes_moved == 4000.0
+    got = mig.get(5, like={"kv": np.zeros(1000, np.float32)})
+    assert np.array_equal(got["kv"], state["kv"])
+    assert mig.transfers == [(5, 0, 2)]
+
+
+def test_migrator_stateless_vw_moves_free(tmp_path):
+    mig = VWStateMigrator(str(tmp_path / "mig"))
+    assert mig.transfer(3, 0, 1) == 0.0
+    assert mig.bytes_moved == 0.0
+    assert mig.get(3) is None
+    assert mig.transfers == [(3, 0, 1)]
+
+
+def test_migrator_versions_are_atomic(tmp_path):
+    """Each put commits through .tmp→rename; a stale .tmp from a crashed
+    transfer never shadows the committed version."""
+    mig = VWStateMigrator(str(tmp_path / "mig"))
+    mig.put(1, {"s": np.zeros(4, np.float32)})
+    mig.put(1, {"s": np.ones(4, np.float32)})
+    vw_dir = os.path.join(str(tmp_path / "mig"), "vw_1")
+    os.makedirs(os.path.join(vw_dir, "step_00000099.tmp"))
+    got = mig.get(1, like={"s": np.zeros(4, np.float32)})
+    assert np.array_equal(got["s"], np.ones(4))
