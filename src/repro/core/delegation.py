@@ -283,7 +283,11 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
         transfers (callers without per-VW accounting use the mean shard
         state size). With ``cfg.byte_budget_per_slot > 0`` the pair
         count is clamped so ``n_pairs · unit_bytes`` stays within the
-        byte budget; None skips the byte clamp.
+        byte budget, floored at one pair (matching
+        ``controller_step``'s byte clamp) so a unit larger than the
+        budget rate-limits to one move per slot instead of wedging
+        callers that rely on forward progress; None skips the byte
+        clamp.
 
     Returns (src [M] i32, dst [M] i32, n_pairs i32, new PairQueues);
     only the first ``n_pairs`` schedule entries are valid.
@@ -301,7 +305,7 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
         fit = jnp.floor(cfg.byte_budget_per_slot
                         / jnp.maximum(jnp.asarray(unit_bytes, jnp.float32),
                                       1e-9)).astype(jnp.int32)
-        n_exec = jnp.minimum(n_exec, jnp.maximum(fit, 0))
+        n_exec = jnp.minimum(n_exec, jnp.maximum(fit, 1))
     lt = jnp.arange(cfg.max_moves_per_slot, dtype=jnp.int32) < n_exec
     served_src = jnp.zeros((cfg.n_workers,), jnp.int32).at[src].add(
         lt.astype(jnp.int32))

@@ -102,22 +102,33 @@ class ChaosSchedule:
                mean_slowtime: int = 20) -> "ChaosSchedule":
         """A seeded random script: at most one replica is down at a time
         (crash→delayed recovery loops), independent slowdown episodes on
-        the others. Derived once from ``seed`` — re-running the schedule
-        replays the identical fault sequence."""
+        the others. Crash and slow episodes never overlap on one replica
+        — ``apply_chaos`` treats "recover" kind-agnostically, so a slow
+        episode's recover landing mid-downtime would revive the corpse
+        early and break the one-down-at-a-time invariant. Derived once
+        from ``seed`` — re-running the schedule replays the identical
+        fault sequence."""
         rng = np.random.default_rng(seed)
         events: list[ChaosEvent] = []
-        down_until = 0
+        down_until, down_replica = 0, -1
         slow_until = np.zeros(n_replicas, np.int64)
         for step in range(1, n_steps + 1):
             if step >= down_until and rng.random() < p_crash:
-                r = int(rng.integers(n_replicas))
-                dt = max(1, int(rng.exponential(mean_downtime)))
-                events.append(ChaosEvent(step, "crash", r))
-                events.append(ChaosEvent(min(step + dt, n_steps),
-                                         "recover", r))
-                down_until = step + dt
+                # never crash a replica mid-slow-episode: its pending
+                # slow recover would cut the crash downtime short
+                up = [r for r in range(n_replicas)
+                      if slow_until[r] <= step]
+                if up:
+                    r = up[int(rng.integers(len(up)))]
+                    dt = max(1, int(rng.exponential(mean_downtime)))
+                    events.append(ChaosEvent(step, "crash", r))
+                    events.append(ChaosEvent(min(step + dt, n_steps),
+                                             "recover", r))
+                    down_until, down_replica = step + dt, r
             if p_slow > 0:
                 for r in range(n_replicas):
+                    if r == down_replica and step < down_until:
+                        continue   # no slow episodes on the down replica
                     if step >= slow_until[r] and rng.random() < p_slow:
                         dt = max(1, int(rng.exponential(mean_slowtime)))
                         events.append(ChaosEvent(step, "slow", r,

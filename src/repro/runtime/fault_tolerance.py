@@ -181,6 +181,7 @@ class VWStateMigrator:
         self.root = root_dir
         self._version: dict[int, int] = {}
         self._nbytes: dict[int, float] = {}
+        self._treedef: dict[int, object] = {}   # last put() tree structure
         self.transfers: list[tuple[int, int, int]] = []   # (vw, src, dst)
         self.bytes_moved = 0.0
 
@@ -197,17 +198,24 @@ class VWStateMigrator:
         ckpt.save(self._dir(vw), v, tree, max_keep=2)
         self._version[vw] = v
         self._nbytes[vw] = self._tree_bytes(tree)
+        self._treedef[vw] = jax.tree.structure(tree)
 
     def get(self, vw: int, like=None):
         """Latest committed state of ``vw`` (None if never put). ``like``
-        defaults to the last tree shape put for this VW."""
+        defaults to the structure of the last tree ``put`` for this VW —
+        a dict/nested tree comes back as that tree, not a flat leaf
+        list; only a process that never ``put`` this VW (and passes no
+        ``like``) gets the leaves in manifest order."""
         v = ckpt.latest_step(self._dir(vw))
         if v is None:
             return None
         if like is None:
-            like = ckpt.restore(self._dir(vw), v,
-                                self._like_from_manifest(vw, v))
-            return like
+            leaves = ckpt.restore(self._dir(vw), v,
+                                  self._like_from_manifest(vw, v))
+            td = self._treedef.get(vw)
+            if td is not None and td.num_leaves == len(leaves):
+                return jax.tree.unflatten(td, leaves)
+            return leaves
         return ckpt.restore(self._dir(vw), v, like)
 
     def _like_from_manifest(self, vw: int, v: int):

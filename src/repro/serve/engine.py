@@ -30,12 +30,16 @@ import jax.numpy as jnp
 class Request(NamedTuple):
     """One queued request. ``t``/``step`` are the *original* submit
     time/tick — retries keep them, so latency always measures from first
-    submission (failures make requests slower, never younger)."""
+    submission (failures make requests slower, never younger). ``enq``
+    is the tick of the most recent (re-)enqueue: the head-of-line
+    timeout measures from it, so a retry gets a fresh timeout window
+    instead of being instantly stale on a healthy replica."""
     t: float          # wall-clock submit time (monotonic)
     step: int         # engine tick at submit
     key: int          # routing key (needed to re-route on retry)
     payload: object
     attempts: int = 0  # completed re-routes (0 = first delivery)
+    enq: int = 0       # engine tick of the last (re-)enqueue
 
 
 @dataclass
@@ -497,7 +501,9 @@ class ServingEngine:
     * **At-least-once retries.** Stranded requests go to a retry queue
       with exponential backoff (``retry_backoff_steps · 2^attempts``
       ticks, capped) and re-route through the normal submit path with
-      their *original* submit time — nothing is ever silently dropped:
+      their *original* submit time but a *fresh* head-of-line timeout
+      window (``request_timeout_steps`` measures from the last
+      re-enqueue) — nothing is ever silently dropped:
       ``submitted == served + in_flight`` at every tick (``dropped``
       exists only to pin that contract at 0).
     * **Re-admission ramp.** A recovered replica re-enters with its
@@ -571,7 +577,7 @@ class ServingEngine:
         self.submitted += len(keys)
         for r, k, p in zip(assign, keys, payloads):
             self.replicas[int(r)].queue.append(
-                Request(now, self.step_idx, int(k), p))
+                Request(now, self.step_idx, int(k), p, enq=self.step_idx))
 
     @property
     def in_flight(self) -> int:
@@ -645,7 +651,7 @@ class ServingEngine:
         for a, req in zip(assign, ready):
             rep = self.replicas[int(a)]
             if rep.alive or not self._dead[int(a)]:
-                rep.queue.append(req)
+                rep.queue.append(req._replace(enq=self.step_idx))
             else:
                 self._schedule_retry(req)    # landed on a corpse: back off
                 self.retried += 1
@@ -705,15 +711,29 @@ class ServingEngine:
         for i, (rep, fn) in enumerate(zip(self.replicas, self.fns)):
             if not rep.alive:
                 # a crashed process serves nothing; once declared dead
-                # its (empty) queue reads as full pressure so it stays
-                # latched busy — shedding, never absorbing
-                occupancy[i] = (1.0 if self._dead[i]
-                                else len(rep.queue) / self.router.max_queue)
-                rep.busy_signal = occupancy[i] > self.router.queue_hi
+                # it reads as full pressure *while it still owns VWs*
+                # (evacuation can span slots under a byte budget) so it
+                # keeps shedding. Once stripped it exerts neutral
+                # pressure — between the idle and busy bands — so it
+                # neither clogs the busy queue with no-op shed attempts
+                # nor latches idle and absorbs VWs back.
+                if self._dead[i]:
+                    owns = bool((np.asarray(self.router.vw_owner)
+                                 == i).any())
+                    occupancy[i] = (1.0 if owns else 0.5 * (
+                        self.router.queue_lo + self.router.queue_hi))
+                    rep.busy_signal = owns
+                else:
+                    occupancy[i] = len(rep.queue) / self.router.max_queue
+                    rep.busy_signal = occupancy[i] > self.router.queue_hi
                 rep.idle_signal = False
                 continue
+            # head-of-line timeout measures from the last (re-)enqueue,
+            # not the original submit — a retried request must get a
+            # fresh window on its new replica or it would time out again
+            # at every queue head forever (a drain-less livelock)
             if self.request_timeout_steps > 0:
-                while rep.queue and (self.step_idx - rep.queue[0].step
+                while rep.queue and (self.step_idx - rep.queue[0].enq
                                      > self.request_timeout_steps):
                     self._schedule_retry(rep.queue.popleft())
                     self.retried += 1

@@ -245,6 +245,22 @@ def test_plan_pairs_byte_clamp():
     assert int(k) == 3
 
 
+def test_plan_pairs_byte_clamp_floors_at_one():
+    """A unit_bytes larger than the whole slot budget rate-limits to one
+    pair per slot — the same floor controller_step applies — instead of
+    clamping to zero and wedging callers that need forward progress."""
+    n = 6
+    cfg = D.DelegationConfig(n_workers=n, n_virtual=0,
+                             max_moves_per_slot=4,
+                             byte_budget_per_slot=250.0)
+    pressure = jnp.asarray([3.0, 2.5, 2.0, 0.1, 0.2, 0.3])
+    busy = jnp.asarray([True, True, True, False, False, False])
+    idle = ~busy
+    _, _, k, _ = D.plan_pairs(cfg, D.init_queues(n), pressure, busy, idle,
+                              unit_bytes=1000.0)
+    assert int(k) == 1
+
+
 @pytest.mark.parametrize("capacity_weighted", [False, True])
 def test_random_streams_conserve_population(capacity_weighted):
     rng = np.random.default_rng(3)

@@ -47,6 +47,25 @@ def test_chaos_kind_validated():
         ChaosSchedule.kill_one(0, at=10, recover_at=5)
 
 
+def test_chaos_random_slow_never_touches_the_down_replica():
+    """apply_chaos treats "recover" kind-agnostically, so a slow episode
+    overlapping a crash downtime would revive the corpse early: between
+    a crash and its paired recover, no other event may target the down
+    replica."""
+    s = ChaosSchedule.random(7, n_replicas=4, n_steps=3000, p_crash=0.01,
+                             p_slow=0.05, mean_downtime=40,
+                             mean_slowtime=30)
+    assert any(e.kind == "slow" for e in s.events)   # scenario exercised
+    down = None
+    for e in s.events:                               # sorted by step
+        if e.kind == "crash":
+            assert down is None                      # one down at a time
+            down = e.replica
+        elif down is not None and e.replica == down:
+            assert e.kind == "recover"
+            down = None
+
+
 def test_chaos_random_is_seed_deterministic():
     a = ChaosSchedule.random(3, n_replicas=8, n_steps=500, p_crash=0.02)
     b = ChaosSchedule.random(3, n_replicas=8, n_steps=500, p_crash=0.02)
@@ -129,6 +148,33 @@ def test_request_timeout_requeues_stuck_requests():
     assert eng.retried > before
     served = sum(r.served for r in eng.replicas)
     assert eng.submitted == served + eng.in_flight   # nothing lost
+
+
+def test_timed_out_retries_get_a_fresh_window_and_drain():
+    """The head-of-line timeout measures from the last re-enqueue, not
+    the original submit: a burst deep enough that head-of-line wait
+    exceeds the timeout must still drain to zero in flight (retries with
+    the original tick would time out at every queue head forever)."""
+    eng = _engine(2, request_timeout_steps=2, retry_backoff_steps=1)
+    eng.submit_batch(np.zeros(64, np.int32), list(range(64)))
+    for _ in range(300):
+        if eng.in_flight == 0:
+            break
+        eng.step()
+    assert eng.in_flight == 0
+    assert sum(r.served for r in eng.replicas) == eng.submitted
+    assert eng.dropped == 0
+
+
+def test_stripped_dead_replica_stops_signalling_busy():
+    """Once a declared-dead replica owns zero VWs its busy latch must
+    release — a corpse at occupancy 1.0 would rank first in the busy
+    queue forever and pollute the severity ordering."""
+    eng = _engine(4, chaos=ChaosSchedule.kill_one(2, at=2))
+    _drive(eng, 10, drain=False)
+    assert not (np.asarray(eng.router.vw_owner) == 2).any()
+    rep = eng.replicas[2]
+    assert not rep.busy_signal and not rep.idle_signal
 
 
 # -- recovery ramp ----------------------------------------------------------

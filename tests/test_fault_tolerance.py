@@ -167,6 +167,25 @@ def test_migrator_stateless_vw_moves_free(tmp_path):
     assert mig.transfers == [(3, 0, 1)]
 
 
+def test_migrator_get_without_like_restores_tree_structure(tmp_path):
+    """get(vw) with no template must return the structure last put for
+    the VW — a nested dict comes back a nested dict, not a flat leaf
+    list (the transfer round-trip depends on this)."""
+    mig = VWStateMigrator(str(tmp_path / "mig"))
+    tree = {"kv": np.arange(8, dtype=np.float32),
+            "meta": {"pos": np.asarray(7, np.int32)}}
+    mig.put(3, tree)
+    got = mig.get(3)
+    assert isinstance(got, dict) and set(got) == {"kv", "meta"}
+    np.testing.assert_array_equal(got["kv"], tree["kv"])
+    assert int(got["meta"]["pos"]) == 7
+    # the transfer path re-commits the same structure
+    mig.transfer(3, 0, 1)
+    again = mig.get(3)
+    assert isinstance(again, dict)
+    np.testing.assert_array_equal(again["kv"], tree["kv"])
+
+
 def test_migrator_versions_are_atomic(tmp_path):
     """Each put commits through .tmp→rename; a stale .tmp from a crashed
     transfer never shadows the committed version."""
