@@ -34,6 +34,9 @@ _METRICS = {
     "pre_mean_latency_steps", "during_mean_latency_steps",
     "during_p99_latency_steps", "settled_mean_latency_steps",
     "settled_over_pre", "lost", "retried", "evacuations", "bytes_moved",
+    "ratio", "exact", "served", "in_flight_end", "dropped", "submitted",
+    "cpu_cores", "oracle_msgs_per_sec", "block_msgs_per_sec",
+    "block_over_oracle",
 }
 
 

@@ -32,7 +32,7 @@ from repro import configs
 from repro.configs.base import SHAPES
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
 
-from .common import fmt, table
+from .common import fmt, record, table, time_median, wp_keys
 
 # CPU-backend bf16→f32 legalization inflates temp memory vs a native-bf16
 # TPU program; measured 2.1× on the layer microbenchmark (DESIGN.md §9 /
@@ -199,11 +199,43 @@ _FIX_NOTES = {
 }
 
 
+def _measured_porc(quick: bool):
+    """Measured jnp-block engine vs strict oracle on the WP trace.
+
+    Unlike the dry-run table below this always runs, so CI's
+    BENCH_results.json carries a real routing-roofline row even when no
+    compiled dry-run artifacts are present (previously the bench
+    recorded nothing in that case).
+    """
+    from repro.kernels.ref import ref_porc_assign, ref_porc_snapshot
+
+    # the sequential oracle is ~1.2 k msgs/s on CPU — keep M small
+    # enough that the measured row costs seconds, not minutes
+    M = 8192 if quick else 65536
+    n_bins, block = 1024, 512
+    keys = wp_keys(M)
+    t_oracle, _ = time_median(
+        lambda: ref_porc_assign(keys, n_bins, block=block))
+    t_block, _ = time_median(
+        lambda: ref_porc_snapshot(keys, n_bins, block=block))
+    record("roofline", scenario="porc_engines", n_msgs=M, n_bins=n_bins,
+           block=block, oracle_msgs_per_sec=M / t_oracle,
+           block_msgs_per_sec=M / t_block,
+           block_over_oracle=t_oracle / t_block)
+    print(table("§Roofline — measured PoRC engines (WP trace)",
+                ["engine", "msgs/sec", "vs oracle"],
+                [["oracle (sequential-exact)", fmt(M / t_oracle, 0), "1.00"],
+                 ["jnp-block (snapshot)", fmt(M / t_block, 0),
+                  fmt(t_oracle / t_block, 2)]]))
+
+
 def run(quick: bool = False, results_dir: str = "results/dryrun"):
+    _measured_porc(quick)
     reps = load_reports(results_dir)
     if not reps:
         print("no dry-run reports found — run "
-              "`python -m repro.launch.dryrun --all --out ...` first")
+              "`python -m repro.launch.dryrun --all --out ...` first "
+              "(measured PoRC rows above were still recorded)")
         return
     rows = []
     for r in reps:

@@ -19,6 +19,11 @@ after slot. This module closes both loops:
   ``[min_moves, max_moves]``. Under a flash crowd the budget opens up
   to ``max_moves`` within a couple of slots; at equilibrium it falls
   back to ``min_moves`` so steady state is not churned.
+  ``per_worker_budget=True`` refines this from one fleet-wide scalar
+  to an [n] vector: each worker's *own* depth excess caps how many VWs
+  it may shed this slot (``plan_pairs``/``rebalance_step`` consume the
+  vector as per-worker shed caps), so one flooded worker no longer
+  opens the budget for every mildly-backed-up one.
 * **Busy/idle hysteresis** (``hysteresis=True``). Signals latch:
   a worker *enters* the busy set only after its pressure has exceeded
   the enter level for ``dwell`` consecutive slots, and *exits* only
@@ -51,6 +56,11 @@ class ControllerConfig(NamedTuple):
     max_moves: int = 8             # = the engine's max_moves_per_slot
     depth_decay: float = 0.5       # EWMA decay of per-worker depths;
                                    # window ≈ 1/(1-decay) slots
+    per_worker_budget: bool = False  # emit an [n] budget vector (each
+                                   # worker's own EWMA'd depth excess)
+                                   # instead of one fleet-wide scalar;
+                                   # delegation caps each worker's shed
+                                   # count by its entry
     # --- busy/idle hysteresis ---
     hysteresis: bool = False       # latch signals between enter/exit
     dwell: int = 3                 # consecutive over-enter slots before
@@ -112,9 +122,11 @@ def controller_step(cfg: ControllerConfig, state: ControllerState,
         below 1 so a starved budget cannot wedge the engine); None or
         ``byte_budget=0`` leaves the budget purely move-count-driven.
 
-    Returns ``(new_state, busy [n] bool, idle [n] bool, budget i32)``;
-    feed ``busy``/``idle``/``budget`` straight into
-    ``delegation.rebalance_step``.
+    Returns ``(new_state, busy [n] bool, idle [n] bool, budget)``;
+    ``budget`` is a scalar i32 — or an [n] i32 vector of per-worker
+    shed caps under ``cfg.per_worker_budget``. Feed
+    ``busy``/``idle``/``budget`` straight into
+    ``delegation.rebalance_step`` (both shapes are accepted).
     """
     pressure = jnp.asarray(pressure, jnp.float32)
     depths = jnp.asarray(depths, jnp.float32)
@@ -137,11 +149,21 @@ def controller_step(cfg: ControllerConfig, state: ControllerState,
 
     depth_ewma = (cfg.depth_decay * state.depth_ewma
                   + (1.0 - cfg.depth_decay) * depths)
-    if cfg.adaptive_moves:
+    unit_f = jnp.maximum(jnp.asarray(unit, jnp.float32), 1e-9)
+    if cfg.adaptive_moves and cfg.per_worker_budget:
+        # per-worker: each worker's own backlog above the fleet mean
+        # sets how many VWs *it* may shed this slot. Busy workers keep
+        # the min_moves pacing floor (a latched busy signal must be
+        # able to make progress); everyone else may sit at 0.
+        excess_w = jnp.maximum(depth_ewma - jnp.mean(depth_ewma), 0.0)
+        demand_w = jnp.ceil(excess_w / unit_f).astype(jnp.int32)
+        budget = jnp.clip(demand_w, 0, cfg.max_moves)
+        budget = jnp.where(busy, jnp.maximum(budget, cfg.min_moves),
+                           budget)
+    elif cfg.adaptive_moves:
         excess = jnp.sum(jnp.maximum(
             depth_ewma - jnp.mean(depth_ewma), 0.0))
-        demand = jnp.ceil(excess / jnp.maximum(
-            jnp.asarray(unit, jnp.float32), 1e-9))
+        demand = jnp.ceil(excess / unit_f)
         budget = jnp.clip(demand.astype(jnp.int32),
                           cfg.min_moves, cfg.max_moves)
     else:
@@ -158,7 +180,10 @@ def controller_step(cfg: ControllerConfig, state: ControllerState,
         busy_dwell=busy_dwell,
         idle_dwell=idle_dwell,
         flaps=state.flaps + flips,
-        budget=budget)
+        # telemetry stays a scalar either way (the cg scan stacks it):
+        # the vector's effective total is what the engine can execute
+        budget=(jnp.minimum(jnp.sum(budget), cfg.max_moves)
+                .astype(jnp.int32) if budget.ndim else budget))
     return new_state, busy, idle, budget
 
 

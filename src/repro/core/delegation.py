@@ -68,6 +68,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 NOT_QUEUED = jnp.iinfo(jnp.int32).max     # sorts after every real slot
 
@@ -276,9 +277,11 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
       pressure: [n] f32, higher = more overloaded (orders busy workers
         descending and idle workers ascending).
       busy/idle: [n] bool signal masks for this slot.
-      budget: optional i32 scalar — this slot's move budget (e.g. from
+      budget: optional i32 — this slot's move budget (e.g. from
         ``controller.controller_step``), clamped by
-        ``max_moves_per_slot``; None keeps the static budget.
+        ``max_moves_per_slot``; None keeps the static budget. An [n]
+        vector is taken as per-worker shed caps instead (a worker with
+        cap 0 moves nothing but keeps its FCFS queue position).
       unit_bytes: optional f32 scalar — the state bytes one move
         transfers (callers without per-VW accounting use the mean shard
         state size). With ``cfg.byte_budget_per_slot > 0`` the pair
@@ -298,9 +301,17 @@ def plan_pairs(cfg: DelegationConfig, queues: PairQueues, pressure,
     idle_rank = _fcfs_rank(idle_since, pressure)
     shed = (busy_since != NOT_QUEUED).astype(jnp.int32)
     absorb = (idle_since != NOT_QUEUED).astype(jnp.int32)
-    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    shed_cap, n_exec_cap = shed, None
     if budget is not None:
-        n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
+        budget = jnp.asarray(budget, jnp.int32)
+        if budget.ndim:        # [n] per-worker caps (0 = hold in queue)
+            shed_cap = jnp.minimum(shed, budget)
+        else:
+            n_exec_cap = budget
+    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed_cap,
+                                 absorb)
+    if n_exec_cap is not None:
+        n_exec = jnp.minimum(n_exec, n_exec_cap)
     if unit_bytes is not None and cfg.byte_budget_per_slot > 0:
         fit = jnp.floor(cfg.byte_budget_per_slot
                         / jnp.maximum(jnp.asarray(unit_bytes, jnp.float32),
@@ -334,11 +345,15 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
       vw_arrivals: [V] f32 per-VW arrivals since the previous tick.
       capacities: [n] f32 service-rate estimates (any scale — only the
         shares matter); ignored unless ``cfg.capacity_weighted``.
-      budget: optional i32 scalar — this slot's move budget, typically
-        derived from queue depth by ``controller.controller_step``. The
-        static ``max_moves_per_slot`` stays the hard ceiling (schedule
-        arrays are sized by it); None keeps the static budget, which is
-        bit-identical to the pre-controller engine.
+      budget: optional i32 — this slot's move budget, typically derived
+        from queue depth by ``controller.controller_step``. A scalar
+        clamps the slot's executed-move count; an [n] vector clamps
+        each worker's shed count individually (per-worker budgets — a
+        worker with cap 0 moves nothing but keeps its FCFS queue
+        position). The static ``max_moves_per_slot`` stays the hard
+        ceiling (schedule arrays are sized by it); None keeps the
+        static budget, which is bit-identical to the pre-controller
+        engine.
       vw_bytes: optional [V] f32 per-VW state sizes — turns on
         migration-cost accounting: ``byte_budget_per_slot`` caps the
         bytes this slot migrates and ``min_gain_per_byte`` gates each
@@ -360,9 +375,22 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
     rate_w = jnp.zeros((n,), jnp.float32).at[state.vw_owner].add(rate)
     shed, absorb = _budgets(cfg, owned_count, rate_w, in_busy, in_idle,
                             jnp.asarray(capacities, jnp.float32))
-    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed, absorb)
+    # ``shed`` (uncapped demand) drives the FCFS dequeue below; the
+    # schedule may additionally be capped by the controller's budget —
+    # a scalar clamps the executed-move count, an [n] vector clamps
+    # each worker's shed count individually (per-worker budgets). A
+    # budget-starved worker keeps its queue position either way.
+    shed_cap, n_exec_cap = shed, None
     if budget is not None:
-        n_exec = jnp.minimum(n_exec, jnp.asarray(budget, jnp.int32))
+        budget = jnp.asarray(budget, jnp.int32)
+        if budget.ndim:
+            shed_cap = jnp.minimum(shed, budget)
+        else:
+            n_exec_cap = budget
+    src, dst, n_exec = _schedule(cfg, busy_rank, idle_rank, shed_cap,
+                                 absorb)
+    if n_exec_cap is not None:
+        n_exec = jnp.minimum(n_exec, n_exec_cap)
     owner, n_done, served_src, served_dst, n_bytes = _execute(
         cfg, state.vw_owner, rate, src, dst, n_exec, vw_bytes)
     # fully-served workers leave their queue; partially-served ones keep
@@ -377,6 +405,73 @@ def rebalance_step(cfg: DelegationConfig, state: DelegationState, pressure,
         moves=state.moves + n_done,
         bytes_moved=state.bytes_moved + n_bytes)
     return new_state, n_done
+
+
+class VersionedOwnerMap:
+    """Replicated owner map with atomic versioned commits (§V-C owner
+    propagation on a mesh).
+
+    On a multi-host mesh every source router holds a copy of the
+    VW→worker map; ``rebalance_step``/``evacuate`` *commit* a new map
+    atomically under a monotonically increasing version, and the head
+    propagates to the routers asynchronously. A router that has not yet
+    adopted the head keeps routing against the **base** view — the last
+    snapshot every router is known to hold — so a stale router is
+    merely conservative (it routes on the pre-move map), never torn:
+    ``view()`` always returns one committed snapshot whole, no mix of
+    two maps.
+
+    Versions only move forward: ``commit`` increments, ``adopt``
+    promotes head→base at the head's version. Passing ``mesh`` pins
+    both snapshots replicated (``PartitionSpec()``) across the mesh's
+    devices — the layout a real deployment broadcasts.
+    """
+
+    def __init__(self, owner, mesh=None):
+        self._sharding = (NamedSharding(mesh, PartitionSpec())
+                          if mesh is not None else None)
+        owner = self._pin(jnp.asarray(owner, jnp.int32))
+        self._base = owner
+        self._head = owner
+        self._version = 0
+        self._base_version = 0
+
+    def _pin(self, arr):
+        if self._sharding is not None:
+            return jax.device_put(arr, self._sharding)
+        return arr
+
+    @property
+    def version(self) -> int:
+        """Version of the latest committed map (monotonic)."""
+        return self._version
+
+    @property
+    def base_version(self) -> int:
+        """Version of the snapshot every router is known to hold."""
+        return self._base_version
+
+    def commit(self, owner) -> int:
+        """Atomically publish a new owner map as the head of the next
+        version. Returns the new version."""
+        self._head = self._pin(jnp.asarray(owner, jnp.int32))
+        self._version += 1
+        return self._version
+
+    def adopt(self) -> int:
+        """Every router has received the head: promote it to base.
+        Returns the adopted version."""
+        self._base = self._head
+        self._base_version = self._version
+        return self._base_version
+
+    def view(self, version: int | None = None) -> jnp.ndarray:
+        """The snapshot a router holding ``version`` routes against:
+        the head when it has the current version, else the base
+        fallback. ``None`` means current."""
+        if version is None or version >= self._version:
+            return self._head
+        return self._base
 
 
 def evacuate(vw_owner, vw_rate, dead, capacities, vw_bytes=None):

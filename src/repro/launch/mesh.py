@@ -27,6 +27,16 @@ def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def make_source_mesh(n_hosts: int | None = None):
+    """1-D mesh whose single ``sources`` axis carries the serving
+    runtime's source lanes (``repro.kernels.mesh`` /
+    ``repro.serve.mesh``). Defaults to every local device — under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` that is the
+    N simulated hosts the multihost bench and CI job use."""
+    n = n_hosts or len(jax.devices())
+    return jax.make_mesh((n,), ("sources",))
+
+
 def enter_mesh(mesh):
     """Context manager installing ``mesh`` as the ambient mesh.
 

@@ -213,3 +213,33 @@ def act_rules(mesh, pure_dp: bool = False) -> dict:
 
 def scalar_sharding(mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Serving-runtime routing state (repro.kernels.mesh source lanes)
+# ---------------------------------------------------------------------------
+
+# MultiSourcePorcState field -> spec on a ("sources",) mesh: the
+# per-source lanes shard row-wise over the axis, everything merged or
+# scalar replicates. (Sketch lanes are listed for completeness; the
+# mesh engine currently rejects policy-carrying state.)
+_ROUTING_LANE_SPECS = {
+    "delta": P("sources", None),
+    "sketch_delta": P("sources", None, None),
+}
+
+
+def routing_state_specs(state) -> dict:
+    """PartitionSpec per ``MultiSourcePorcState`` field for a mesh with
+    a ``sources`` axis — lanes sharded, merged views replicated."""
+    return {f: _ROUTING_LANE_SPECS.get(f, P())
+            for f in type(state)._fields}
+
+
+def routing_state_shardings(state, mesh):
+    """NamedSharding pytree matching ``state`` (None fields stay None)."""
+    specs = routing_state_specs(state)
+    return type(state)(**{
+        f: (None if getattr(state, f) is None
+            else NamedSharding(mesh, specs[f]))
+        for f in type(state)._fields})

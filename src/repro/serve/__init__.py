@@ -1,1 +1,2 @@
 from .engine import CGRequestRouter, ServingEngine  # noqa: F401
+from .mesh import MeshCGRequestRouter  # noqa: F401

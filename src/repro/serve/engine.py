@@ -7,9 +7,12 @@ by PoRC onto *virtual replicas*, which CG pairing re-assigns as
 replicas signal busy/idle from their queue occupancy — the paper's
 queue-length utilization signal (§VII "Monitoring Performance").
 
-The engine is single-process here (replicas are model states on the
-same mesh or plain callables in tests); the routing layer is the part
-that scales out.
+The routing layer is the part that scales out, and it does:
+``serve.mesh.MeshCGRequestRouter`` puts the source lanes and routing
+state on a JAX device mesh via ``shard_map`` (see docs/multihost.md).
+The replica drain loop stays host-side (replicas are model states on
+the same mesh or plain callables in tests); ``async_submit=True``
+overlaps the sharded routing dispatch with the previous tick's drain.
 """
 from __future__ import annotations
 
@@ -105,6 +108,11 @@ class CGRequestRouter:
     adaptive_moves: bool = False  # per-tick move budget from queue
                                   # depth (repro.core.controller),
                                   # clamped [min_moves, max_moves_per_rebalance]
+    per_worker_budgets: bool = False  # adaptive budget as an [n] vector
+                                  # (each replica's own depth excess
+                                  # caps its shed count) instead of one
+                                  # fleet-wide scalar; needs
+                                  # adaptive_moves
     min_moves: int = 1            # adaptive budget floor
     depth_decay: float = 0.5      # EWMA decay of replica queue depths
     hysteresis: bool = False      # latch busy/idle between enter/exit
@@ -132,6 +140,9 @@ class CGRequestRouter:
 
     def __post_init__(self):
         self.n_virtual = self.n_replicas * self.alpha
+        if self.per_worker_budgets and not self.adaptive_moves:
+            raise ValueError("per_worker_budgets requires adaptive_moves"
+                             " (the budgets are the adaptive ones)")
         if self.hh_scheme:
             from repro.core.cg import _hh_letter
             from repro.kernels.ref import HHPolicy
@@ -176,6 +187,7 @@ class CGRequestRouter:
                 controller.ControllerConfig(
                     n_workers=self.n_replicas,
                     adaptive_moves=self.adaptive_moves,
+                    per_worker_budget=self.per_worker_budgets,
                     min_moves=self.min_moves,
                     max_moves=self.max_moves_per_rebalance,
                     depth_decay=self.depth_decay,
@@ -212,6 +224,20 @@ class CGRequestRouter:
     def vw_owner(self, value) -> None:
         self._dstate = self._dstate._replace(
             vw_owner=jnp.asarray(value, jnp.int32))
+        self._note_owner_update(force=True)
+
+    def _owner_view(self):
+        """The owner map the submit path gathers from (device array).
+        The mesh router overrides this with its versioned replicated
+        view; here the live map is the only copy."""
+        return self._dstate.vw_owner
+
+    def _note_owner_update(self, force: bool = False) -> None:
+        """Hook: the authoritative owner map just changed (rebalance,
+        evacuation or direct assignment). The mesh router commits a new
+        version here; single-host routing needs nothing (the live map
+        is what ``_owner_view`` returns). ``force`` marks changes that
+        must reach every router at once (evacuation, restores)."""
 
     @property
     def vw_state_bytes(self) -> np.ndarray | None:
@@ -255,6 +281,7 @@ class CGRequestRouter:
                 moves=self._dstate.moves + jnp.int32(n_moved),
                 bytes_moved=self._dstate.bytes_moved + jnp.float32(nbytes))
             self.moves += n_moved
+            self._note_owner_update(force=True)
         return n_moved, nbytes
 
     @property
@@ -367,7 +394,35 @@ class CGRequestRouter:
         self._state = state._replace(
             base=jnp.asarray(load, jnp.float32),
             routed=jnp.float32(self._routed))
-        return int(self._dstate.vw_owner[vw])
+        return int(self._owner_view()[vw])
+
+    def dispatch_batch(self, keys: np.ndarray):
+        """Routing half of the submit path: launch the PoRC assignment
+        on device and return the (still possibly in-flight) VW
+        assignment array without forcing a host sync — the async submit
+        path overlaps this with serving. ``finalize_batch`` turns the
+        handle into replica ids."""
+        keys = np.asarray(keys, np.int32)
+        self._maybe_rebase()
+        assign_vw, self._state = ref_porc_multisource(
+            jnp.asarray(keys), self.n_virtual, self.n_sources,
+            sync_every=self.sync_every, block=self.block_size,
+            eps=self.eps, state=self._state, policy=self._policy)
+        self._routed += len(keys)
+        return assign_vw
+
+    def finalize_batch(self, assign_vw) -> np.ndarray:
+        """Admission half: bind a dispatched VW assignment to replicas
+        through the (possibly versioned) owner view and settle the
+        per-VW state-byte accrual. This is where the host blocks on the
+        device result."""
+        if self._vw_bytes is not None and self.state_bytes_per_request > 0:
+            # keyed session state grows where the requests land
+            self._vw_bytes += self.state_bytes_per_request * np.bincount(
+                np.asarray(assign_vw).ravel(), minlength=self.n_virtual)
+        # owner gather on device — the owner map never leaves it
+        return np.asarray(jnp.take(self._owner_view(),
+                                   jnp.asarray(assign_vw)))
 
     def route_batch(self, keys: np.ndarray) -> np.ndarray:
         """Sharded block-parallel PoRC over virtual replicas (the
@@ -377,20 +432,7 @@ class CGRequestRouter:
         routes as power-of-two sub-blocks, so no padding keys ever
         pollute the load state and arbitrary batch sizes compile only
         O(log block_size) remainder programs."""
-        keys = np.asarray(keys, np.int32)
-        self._maybe_rebase()
-        assign_vw, self._state = ref_porc_multisource(
-            jnp.asarray(keys), self.n_virtual, self.n_sources,
-            sync_every=self.sync_every, block=self.block_size,
-            eps=self.eps, state=self._state, policy=self._policy)
-        self._routed += len(keys)
-        if self._vw_bytes is not None and self.state_bytes_per_request > 0:
-            # keyed session state grows where the requests land
-            self._vw_bytes += self.state_bytes_per_request * np.bincount(
-                np.asarray(assign_vw).ravel(), minlength=self.n_virtual)
-        # owner gather on device — the owner map never leaves it
-        return np.asarray(jnp.take(self._dstate.vw_owner,
-                                   jnp.asarray(assign_vw)))
+        return self.finalize_batch(self.dispatch_batch(keys))
 
     def rebalance(self, busy: list[int], idle: list[int],
                   pressure=None, capacities=None, depths=None) -> int:
@@ -473,6 +515,8 @@ class CGRequestRouter:
             jnp.asarray(busy_mask), jnp.asarray(idle_mask),
             load - self._rated_load, caps, budget, vb)
         self._rated_load = load
+        if int(moved):
+            self._note_owner_update()
         q = self._dstate.queues
         self._queued_busy = bool(jnp.any(q.busy_since != delegation.NOT_QUEUED))
         self._queued_idle = bool(jnp.any(q.idle_since != delegation.NOT_QUEUED))
@@ -519,6 +563,25 @@ class ServingEngine:
       ``repro.runtime.fault_tolerance.VWStateMigrator``) receives a
       ``transfer(vw, src, dst)`` call for every owner-map change —
       rebalance and evacuation share that one migration path.
+    * **Async submit.** ``async_submit=True`` splits the submit path:
+      ``submit_batch`` only *dispatches* the sharded routing on device
+      (``router.dispatch_batch``) and parks the handle; the next
+      ``step`` *admits* it (``finalize_batch`` + enqueue) after chaos
+      and liveness have run — so routing of tick t+1's traffic overlaps
+      tick t's replica drain. Pending dispatches count as ``in_flight``
+      and an admission that lands on a declared-dead replica goes to
+      the retry queue, so ``submitted == served + in_flight`` holds at
+      every tick boundary, async or not. Off = the synchronous
+      route-then-enqueue path, bit-identical to before.
+    * **Capacity-estimate hysteresis.**
+      ``capacity_enter_margin``/``capacity_exit_margin`` latch the
+      served-per-tick capacity EWMA the way the controller latches
+      busy/idle: the estimate only starts tracking when a saturated
+      tick deviates from it by more than the enter margin
+      (relative), then keeps tracking until it re-converges within the
+      exit margin. A recovering replica's one-off hiccup no longer
+      flaps its capacity share; a real speed change is tracked to
+      convergence. Margins at 0 (default) = plain per-tick EWMA.
     """
 
     def __init__(self, replica_fns, router: CGRequestRouter | None = None,
@@ -529,7 +592,10 @@ class ServingEngine:
                  request_timeout_steps: int = 0,
                  readmit_ramp_steps: int = 0,
                  readmit_floor: float = 0.05,
-                 migrator=None):
+                 migrator=None,
+                 async_submit: bool = False,
+                 capacity_enter_margin: float = 0.0,
+                 capacity_exit_margin: float = 0.0):
         n = len(replica_fns)
         self.replicas = [ReplicaState() for _ in replica_fns]
         self.fns = list(replica_fns)
@@ -552,6 +618,12 @@ class ServingEngine:
         self.readmit_ramp_steps = readmit_ramp_steps
         self.readmit_floor = readmit_floor
         self.migrator = migrator
+        self.async_submit = async_submit
+        # (dispatch handle, keys, payloads, submit time, submit tick)
+        self._pending: list[tuple] = []
+        self.capacity_enter_margin = capacity_enter_margin
+        self.capacity_exit_margin = capacity_exit_margin
+        self._cap_latched = np.zeros(n, bool)
         self.step_idx = 0
         self.submitted = 0
         self.retried = 0
@@ -572,6 +644,14 @@ class ServingEngine:
 
     def submit_batch(self, keys: np.ndarray, payloads) -> None:
         keys = np.asarray(keys, np.int32)
+        if self.async_submit:
+            # dispatch only — the device routes while the host keeps
+            # going; the next step() admits the result
+            handle = self.router.dispatch_batch(keys)
+            self.submitted += len(keys)
+            self._pending.append((handle, keys, list(payloads),
+                                  time.monotonic(), self.step_idx))
+            return
         assign = self.router.route_batch(keys)
         now = time.monotonic()
         self.submitted += len(keys)
@@ -579,11 +659,33 @@ class ServingEngine:
             self.replicas[int(r)].queue.append(
                 Request(now, self.step_idx, int(k), p, enq=self.step_idx))
 
+    def _admit_pending(self) -> None:
+        """Admission half of the async submit path: bind every parked
+        dispatch to replicas through the router's current owner view
+        and enqueue. Runs after chaos + liveness so an assignment whose
+        target was just declared dead goes straight to the retry queue
+        instead of a corpse."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        for handle, keys, payloads, t0, tick in pending:
+            assign = self.router.finalize_batch(handle)
+            for a, k, p in zip(assign, keys, payloads):
+                req = Request(t0, tick, int(k), p, enq=self.step_idx)
+                rep = self.replicas[int(a)]
+                if rep.alive or not self._dead[int(a)]:
+                    rep.queue.append(req)
+                else:
+                    self._schedule_retry(req)
+                    self.retried += 1
+
     @property
     def in_flight(self) -> int:
-        """Requests accepted but not yet served (replica queues + the
-        retry queue). ``submitted == served + in_flight`` always."""
-        return sum(len(r.queue) for r in self.replicas) + len(self._retry)
+        """Requests accepted but not yet served (replica queues, the
+        retry queue and pending async dispatches).
+        ``submitted == served + in_flight`` always."""
+        return (sum(len(r.queue) for r in self.replicas) + len(self._retry)
+                + sum(len(p[1]) for p in self._pending))
 
     # -- failure / recovery ----------------------------------------------
     def fail_replica(self, i: int) -> None:
@@ -704,6 +806,7 @@ class ServingEngine:
             for ev in self.chaos.pop_due(self.step_idx):
                 self.apply_chaos(ev)
         self._check_liveness()
+        self._admit_pending()
         self._drain_retries()
         served = 0
         now = time.monotonic()
@@ -758,8 +861,26 @@ class ServingEngine:
             # rank a fast lightly-loaded replica *below* an overloaded
             # one and invert the capacity-weighted budgets.
             if had_work and (len(batch) == cap or rep.queue):
-                self.capacity_estimates[i] = (
-                    0.7 * self.capacity_estimates[i] + 0.3 * len(batch))
+                est = self.capacity_estimates[i]
+                obs = float(len(batch))
+                if self.capacity_enter_margin > 0:
+                    # hysteresis latch (mirrors the controller's
+                    # busy/idle latch): a saturated tick must deviate
+                    # past the enter margin to engage tracking; once
+                    # engaged the EWMA runs until the estimate
+                    # re-converges within the exit margin
+                    if (not self._cap_latched[i]
+                            and abs(obs - est) / max(est, 1e-9)
+                            > self.capacity_enter_margin):
+                        self._cap_latched[i] = True
+                    if self._cap_latched[i]:
+                        est = 0.7 * est + 0.3 * obs
+                        self.capacity_estimates[i] = est
+                        if (abs(obs - est) / max(est, 1e-9)
+                                < self.capacity_exit_margin):
+                            self._cap_latched[i] = False
+                else:
+                    self.capacity_estimates[i] = 0.7 * est + 0.3 * obs
             occ = len(rep.queue) / self.router.max_queue
             occupancy[i] = occ
             rep.busy_signal = occ > self.router.queue_hi

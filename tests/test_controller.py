@@ -360,3 +360,81 @@ def test_straggler_adaptive_budget_scales_with_excess():
     # budget past one move per slot but never past the ceiling
     assert 1 <= bal._controller.last_budget <= 4
     assert bal._controller.last_budget > 1
+
+
+# ---------------------------------------------------------------------------
+# per-worker budgets
+# ---------------------------------------------------------------------------
+
+def test_per_worker_budget_vector_follows_each_workers_excess():
+    """per_worker_budget emits an [n] vector: the flooded worker's own
+    excess opens its budget, workers at the mean stay at 0, latched
+    busy workers keep the min_moves pacing floor, and the telemetry
+    scalar records the effective total."""
+    cfg = C.ControllerConfig(n_workers=4, adaptive_moves=True,
+                             per_worker_budget=True, min_moves=1,
+                             max_moves=8, depth_decay=0.0)
+    st = C.init_controller(cfg)
+    st, busy, _, b = _step(cfg, st, [0.9, 0.1, 0.1, 0.1],
+                           [100.0, 0.0, 0.0, 0.0], unit=10.0)
+    assert b.shape == (4,)
+    assert int(b[0]) == 8                       # 75 backlog / 10 → clip 8
+    assert [int(x) for x in b[1:]] == [0, 0, 0]
+    assert int(st.budget) == 8                  # scalar telemetry
+    # a busy worker with no excess still gets the min_moves floor
+    st2 = C.init_controller(cfg)
+    st2, busy2, _, b2 = _step(cfg, st2, [0.9, 0.9, 0.1, 0.1],
+                              [100.0, 0.0, 0.0, 0.0], unit=10.0)
+    assert bool(busy2[1]) and int(b2[1]) == cfg.min_moves
+
+
+def test_per_worker_budget_caps_sheds_in_delegation():
+    """An [n] budget caps each worker's shed count individually; a
+    budget-0 busy worker moves nothing but keeps its FCFS position."""
+    n, a = 4, 4
+    V = n * a
+    dcfg = D.DelegationConfig(n_workers=n, n_virtual=V,
+                              max_moves_per_slot=8, fcfs=True)
+    st = D.init_state(dcfg)
+    util = jnp.array([0.95, 0.9, 0.1, 0.1], jnp.float32)
+    busy = jnp.array([True, True, False, False])
+    idle = jnp.array([False, False, True, True])
+    bud = jnp.array([1, 0, 0, 0], jnp.int32)
+    st2, moved = D.rebalance_step(dcfg, st, util, busy, idle,
+                                  jnp.ones(V, jnp.float32), jnp.ones(n),
+                                  budget=bud)
+    assert int(moved) == 1
+    assert int((np.asarray(st2.vw_owner)
+                != np.asarray(st.vw_owner)).sum()) == 1
+    # worker 1 (budget 0) moved nothing and is still queued busy
+    assert np.asarray(st2.vw_owner)[np.asarray(st.vw_owner) == 1].tolist() \
+        == [1] * a
+    assert int(st2.queues.busy_since[1]) != D.NOT_QUEUED
+    assert int(st2.queues.busy_since[0]) == D.NOT_QUEUED  # fully served
+    # a vector of max_moves is the same as no budget at all
+    st3, m3 = D.rebalance_step(dcfg, st, util, busy, idle,
+                               jnp.ones(V, jnp.float32), jnp.ones(n))
+    st4, m4 = D.rebalance_step(dcfg, st, util, busy, idle,
+                               jnp.ones(V, jnp.float32), jnp.ones(n),
+                               budget=jnp.full((n,), 8, jnp.int32))
+    assert int(m3) == int(m4)
+    np.testing.assert_array_equal(np.asarray(st3.vw_owner),
+                                  np.asarray(st4.vw_owner))
+
+
+def test_per_worker_budget_router_wiring():
+    """The serving router threads the vector budget end to end, and
+    rejects the knob without adaptive_moves (it would be inert)."""
+    from repro.serve import CGRequestRouter
+    with pytest.raises(ValueError):
+        CGRequestRouter(4, adaptive_moves=False, per_worker_budgets=True)
+    r = CGRequestRouter(4, alpha=8, adaptive_moves=True,
+                        per_worker_budgets=True, capacity_weighted=True)
+    rng = np.random.default_rng(0)
+    r.route_batch((rng.zipf(1.3, 4096) % 512).astype(np.int32))
+    occ = np.array([0.95, 0.1, 0.3, 0.3], np.float32)
+    moved = r.rebalance([0], [1], pressure=occ,
+                        depths=occ * r.max_queue)
+    assert moved >= 1
+    assert isinstance(r.last_budget, int)
+    assert np.bincount(r.vw_owner, minlength=4).sum() == r.n_virtual

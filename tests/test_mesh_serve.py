@@ -1,0 +1,264 @@
+"""Mesh-sharded serving: shard_map kernel parity with the vmapped
+engine, versioned owner-map semantics, and the async submit path's
+conservation invariant under chaos.
+
+The mesh tests parametrize over every host count that divides the
+available device pool — on the default single-device tier-1 run that is
+H=1 (which still exercises the full shard_map + psum program); the CI
+multi-device job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+runs the real 2/4/8-host cells.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delegation as D
+from repro.kernels.mesh import mesh_porc_multisource, shard_multisource_state
+from repro.kernels.ref import (HHPolicy, multisource_state_init,
+                               ref_porc_multisource)
+from repro.launch.mesh import make_source_mesh
+from repro.runtime.chaos import ChaosSchedule
+from repro.serve import CGRequestRouter, MeshCGRequestRouter, ServingEngine
+
+HOSTS = [h for h in (1, 2, 8) if h <= len(jax.devices())]
+
+
+def _zipf_keys(n, seed=0, a=1.3, mod=4096):
+    rng = np.random.default_rng(seed)
+    return (rng.zipf(a, n) % mod).astype(np.int32)
+
+
+# -- shard_map kernel vs vmapped engine -------------------------------------
+
+@pytest.mark.parametrize("hosts", HOSTS)
+@pytest.mark.parametrize("sync_every", [1, 3])
+def test_mesh_kernel_bit_identical_to_vmapped(hosts, sync_every):
+    """The psum delta-merge on the mesh is the same arithmetic as the
+    vmapped ``delta.sum(0)`` — assignments and every state field are
+    bit-identical, including power-of-two remainder spans and the
+    sub-S ragged tail (stream length chosen to hit both)."""
+    keys = jnp.asarray(_zipf_keys(4103))
+    mesh = make_source_mesh(hosts)
+    a_ref, s_ref = ref_porc_multisource(keys, 64, 8, sync_every=sync_every)
+    a_mesh, s_mesh = mesh_porc_multisource(keys, 64, mesh, n_sources=8,
+                                           sync_every=sync_every)
+    np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_mesh))
+    np.testing.assert_array_equal(np.asarray(s_ref.base),
+                                  np.asarray(s_mesh.base))
+    np.testing.assert_array_equal(np.asarray(s_ref.delta),
+                                  np.asarray(s_mesh.delta))
+    assert int(s_ref.ticks) == int(s_mesh.ticks)
+    assert float(s_ref.routed) == float(s_mesh.routed)
+
+
+@pytest.mark.parametrize("hosts", HOSTS)
+def test_mesh_kernel_state_carries_across_calls(hosts):
+    """Mesh calls thread their sharded lane state exactly like the
+    vmapped engine threads its vmapped state: the same two-call split
+    (cut mid-block AND mid-source-round, so the ragged tail and the
+    post-tail delta re-pin are both exercised) stays bit-identical."""
+    keys = _zipf_keys(3000, seed=3)
+    mesh = make_source_mesh(hosts)
+    cut = 1499                        # not a multiple of S=8: tail path
+    a1, sr = ref_porc_multisource(jnp.asarray(keys[:cut]), 64, 8,
+                                  sync_every=2)
+    a2, sr = ref_porc_multisource(jnp.asarray(keys[cut:]), 64, 8,
+                                  sync_every=2, state=sr)
+    b1, sm = mesh_porc_multisource(jnp.asarray(keys[:cut]), 64, mesh,
+                                   n_sources=8, sync_every=2)
+    b2, sm = mesh_porc_multisource(jnp.asarray(keys[cut:]), 64, mesh,
+                                   n_sources=8, sync_every=2, state=sm)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(a1), np.asarray(a2)]),
+        np.concatenate([np.asarray(b1), np.asarray(b2)]))
+    np.testing.assert_array_equal(np.asarray(sr.base),
+                                  np.asarray(sm.base))
+    np.testing.assert_array_equal(np.asarray(sr.delta),
+                                  np.asarray(sm.delta))
+
+
+def test_mesh_lane_sharding_layout():
+    """Each host really owns its delta lane rows: the sharded state's
+    delta is split over the ``sources`` axis, base is replicated."""
+    mesh = make_source_mesh(len(jax.devices()))
+    st = shard_multisource_state(multisource_state_init(32, 8), mesh)
+    H = mesh.shape["sources"]
+    shard_rows = {s.data.shape[0] for s in st.delta.addressable_shards}
+    assert shard_rows == {8 // H}
+    assert all(s.data.shape == (32,) for s in st.base.addressable_shards)
+
+
+def test_shard_state_rejects_policy_and_indivisible():
+    mesh = make_source_mesh(1)
+    with pytest.raises(NotImplementedError):
+        shard_multisource_state(
+            multisource_state_init(32, 4, policy=HHPolicy(scheme="d")), mesh)
+    if len(jax.devices()) > 1:
+        mesh = make_source_mesh(2)
+        with pytest.raises(ValueError):
+            shard_multisource_state(multisource_state_init(32, 3), mesh)
+
+
+# -- mesh router vs single-host router --------------------------------------
+
+@pytest.mark.parametrize("hosts", HOSTS)
+def test_mesh_router_parity_with_single_host(hosts):
+    """MeshCGRequestRouter routes and rebalances bit-identically to
+    CGRequestRouter at matching config (sync_every=1 — the CI-gated
+    exactness cell) across interleaved batches and rebalances."""
+    kw = dict(n_replicas=4, alpha=4, n_sources=8, sync_every=1,
+              capacity_weighted=True)
+    r0 = CGRequestRouter(**kw)
+    r1 = MeshCGRequestRouter(mesh=make_source_mesh(hosts), **kw)
+    keys = _zipf_keys(5400, seed=1)
+    rng = np.random.default_rng(2)
+    for i in range(6):
+        np.testing.assert_array_equal(
+            r0.route_batch(keys[i * 900:(i + 1) * 900]),
+            r1.route_batch(keys[i * 900:(i + 1) * 900]))
+        occ = rng.random(4).astype(np.float32)
+        busy, idle = [int(np.argmax(occ))], [int(np.argmin(occ))]
+        assert r0.rebalance(busy, idle, pressure=occ) == \
+            r1.rebalance(busy, idle, pressure=occ)
+        np.testing.assert_array_equal(r0.vw_owner, r1.vw_owner)
+    np.testing.assert_allclose(r0.vw_load, r1.vw_load)
+
+
+def test_mesh_router_rejects_hh_and_indivisible_sources():
+    with pytest.raises(NotImplementedError):
+        MeshCGRequestRouter(n_replicas=4, hh_scheme="d",
+                            mesh=make_source_mesh(1))
+    if len(jax.devices()) > 1:
+        with pytest.raises(ValueError):
+            MeshCGRequestRouter(n_replicas=4, n_sources=3,
+                                mesh=make_source_mesh(2))
+
+
+# -- versioned owner map ----------------------------------------------------
+
+def test_versioned_owner_map_commit_adopt_view():
+    omap = D.VersionedOwnerMap(jnp.arange(4, dtype=jnp.int32))
+    assert omap.version == 0 and omap.base_version == 0
+    v1 = omap.commit(jnp.array([1, 1, 2, 3], jnp.int32))
+    assert v1 == 1 and omap.base_version == 0
+    # a stale router (version 0) sees the base; a current one the head
+    np.testing.assert_array_equal(np.asarray(omap.view(0)),
+                                  np.arange(4))
+    np.testing.assert_array_equal(np.asarray(omap.view(1)), [1, 1, 2, 3])
+    assert omap.adopt() == 1
+    np.testing.assert_array_equal(np.asarray(omap.view(0)), [1, 1, 2, 3])
+
+
+def test_owner_version_monotone_under_rebalance_and_evacuate():
+    """Interleaved rebalances and an evacuation commit strictly
+    increasing versions; the evacuation (a forced update) adopts
+    immediately."""
+    r = MeshCGRequestRouter(n_replicas=4, alpha=4, n_sources=8,
+                            mesh=make_source_mesh(HOSTS[-1]))
+    r.route_batch(_zipf_keys(1024))
+    seen = [r.owner_version]
+    occ = np.array([0.9, 0.2, 0.5, 0.5], np.float32)
+    for i in range(3):
+        if r.rebalance([0], [1], pressure=occ):
+            assert r.owner_version > seen[-1]
+            seen.append(r.owner_version)
+    n_moved, _ = r.evacuate(0)
+    assert n_moved > 0
+    assert r.owner_version > seen[-1]
+    assert r.owner_adopted_version == r.owner_version  # forced adopt
+    assert not (r.vw_owner == 0).any()
+    assert seen == sorted(seen)
+
+
+def test_stale_owner_fallback_routes_on_base_view():
+    """owner_sync_every=3: rebalance commits land in the head but the
+    submit path keeps gathering from the pre-move base snapshot until
+    enough commits accumulate — stale routers are conservative, never
+    torn."""
+    r = MeshCGRequestRouter(n_replicas=4, alpha=4, n_sources=8,
+                            owner_sync_every=3,
+                            mesh=make_source_mesh(HOSTS[-1]))
+    r.route_batch(_zipf_keys(1024))
+    before = r.vw_owner
+    occ = np.array([0.9, 0.2, 0.5, 0.5], np.float32)
+    assert r.rebalance([0], [1], pressure=occ) == 1
+    after = r.vw_owner
+    assert (before != after).any()
+    assert r.owner_version > r.owner_adopted_version
+    # the routing view is still the pre-move snapshot, as one piece
+    np.testing.assert_array_equal(np.asarray(r._owner_view()), before)
+    # two more commits reach the adoption period: the head is adopted
+    assert r.rebalance([0], [1], pressure=occ) == 1
+    assert r.rebalance([0], [1], pressure=occ) == 1
+    assert r.owner_adopted_version == r.owner_version
+    np.testing.assert_array_equal(np.asarray(r._owner_view()), r.vw_owner)
+
+
+# -- async submit -----------------------------------------------------------
+
+def _mesh_engine(n=4, hosts=None, **kw):
+    router = MeshCGRequestRouter(
+        n_replicas=n, alpha=4, n_sources=8, capacity_weighted=True,
+        mesh=make_source_mesh(hosts or HOSTS[-1]))
+    return ServingEngine([lambda b: b for _ in range(n)], router,
+                         max_batch=8, **kw)
+
+
+def test_async_submit_conservation_under_chaos():
+    """submitted == served + in_flight at every tick with async
+    admission pending, a kill-one on the mesh, and retries in flight;
+    the drain ends with zero in flight and zero dropped."""
+    eng = _mesh_engine(4, chaos=ChaosSchedule.kill_one(2, at=6),
+                       heartbeat_timeout_steps=2, async_submit=True)
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        keys = rng.zipf(1.3, size=32).astype(np.int32) % 512
+        eng.submit_batch(keys, list(keys))
+        served = sum(r.served for r in eng.replicas)
+        assert eng.submitted == served + eng.in_flight   # pending counts
+        eng.step()
+        served = sum(r.served for r in eng.replicas)
+        assert eng.submitted == served + eng.in_flight
+    for _ in range(300):
+        if eng.in_flight == 0:
+            break
+        eng.step()
+    assert eng.in_flight == 0 and eng.dropped == 0
+    assert eng.evacuations == 1
+    served = sum(r.served for r in eng.replicas)
+    assert eng.submitted == served
+
+
+def test_async_submit_admits_next_tick_and_serves_everything():
+    """The async path delays admission by one tick (routing overlaps
+    the drain) but serves the same totals as the sync path."""
+    results = {}
+    for async_ in (False, True):
+        eng = _mesh_engine(4, async_submit=async_)
+        for i in range(10):
+            eng.submit_batch(_zipf_keys(64, seed=i), [None] * 64)
+            eng.step()
+        for _ in range(100):
+            if eng.in_flight == 0:
+                break
+            eng.step()
+        assert eng.in_flight == 0 and eng.dropped == 0
+        results[async_] = sum(r.served for r in eng.replicas)
+    assert results[False] == results[True] == 640
+
+
+def test_async_admission_to_declared_dead_replica_retries():
+    """A dispatch admitted through a view that still maps VWs to a
+    declared-dead replica must not enqueue onto the corpse — it goes to
+    the retry queue (conservation holds either way)."""
+    eng = _mesh_engine(4, async_submit=True)
+    before = eng.router.vw_owner
+    eng.submit_batch(np.arange(64, dtype=np.int32), [None] * 64)
+    eng.fail_replica(0)               # declared + evacuated immediately
+    eng.router.vw_owner = before      # a stale router's map resurfaces
+    eng.step()                        # admission happens after liveness
+    assert len(eng.replicas[0].queue) == 0   # nothing on the corpse
+    assert eng.retried > 0
+    served = sum(r.served for r in eng.replicas)
+    assert eng.submitted == served + eng.in_flight

@@ -268,3 +268,56 @@ def test_capacity_weighted_router_sheds_proportionally():
     assert moved_u == 1
     assert moved_w > moved_u
     assert np.bincount(r_w.vw_owner, minlength=4).sum() == r_w.n_virtual
+
+
+# -- capacity-estimate hysteresis -------------------------------------------
+
+def _saturated_engine(**kw):
+    """One replica with a long backlog so every tick is saturated (the
+    only ticks that update the capacity estimate)."""
+    eng = ServingEngine([lambda b: b], CGRequestRouter(1, alpha=4),
+                        max_batch=8, **kw)
+    eng.submit_batch(np.arange(128, dtype=np.int32), [None] * 128)
+    return eng
+
+
+def test_capacity_estimate_default_is_plain_ewma():
+    """Margins at 0 (default) keep the pre-hysteresis per-tick EWMA
+    bit-identically: est ← 0.7·est + 0.3·obs on every saturated tick."""
+    eng = _saturated_engine()
+    eng.replicas[0].slow_factor = 2.0      # cap 8 → 4
+    expect = 8.0
+    for _ in range(5):
+        eng.step()
+        expect = 0.7 * expect + 0.3 * 4.0
+        assert eng.capacity_estimates[0] == pytest.approx(expect)
+
+
+def test_capacity_latch_freezes_below_enter_margin():
+    """A deviation under the enter margin never perturbs the estimate —
+    the flap a recovering replica's one-off hiccup used to cause."""
+    eng = _saturated_engine(capacity_enter_margin=0.6,
+                            capacity_exit_margin=0.1)
+    eng.replicas[0].slow_factor = 2.0      # obs 4 vs est 8: dev 0.5 < 0.6
+    for _ in range(5):
+        eng.step()
+        assert eng.capacity_estimates[0] == 8.0
+    assert not eng._cap_latched[0]
+
+
+def test_capacity_latch_tracks_real_change_then_releases():
+    """A deviation past the enter margin latches; the EWMA then tracks
+    to convergence and releases once within the exit margin — after
+    which sub-margin wobble is frozen again."""
+    eng = _saturated_engine(capacity_enter_margin=0.3,
+                            capacity_exit_margin=0.1)
+    eng.replicas[0].slow_factor = 2.0      # dev 0.5 > 0.3: latch
+    eng.step()
+    assert eng._cap_latched[0] or eng.capacity_estimates[0] < 8.0
+    for _ in range(12):
+        eng.step()
+    assert eng.capacity_estimates[0] == pytest.approx(4.0, rel=0.15)
+    assert not eng._cap_latched[0]         # converged: released
+    frozen = eng.capacity_estimates[0]
+    eng.step()                             # obs 4 again: dev < enter
+    assert eng.capacity_estimates[0] == frozen

@@ -26,7 +26,7 @@ ROOT = Path(__file__).resolve().parent.parent
 # docs that must exist AND be scanned — the playbooks other docs,
 # benchmarks and CI gate messages point readers at
 REQUIRED = ("docs/tuning.md", "docs/partitioners.md",
-            "docs/fault_tolerance.md")
+            "docs/fault_tolerance.md", "docs/multihost.md")
 
 
 def iter_docs():
