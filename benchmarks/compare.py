@@ -36,7 +36,8 @@ _METRICS = {
     "settled_over_pre", "lost", "retried", "evacuations", "bytes_moved",
     "ratio", "exact", "served", "in_flight_end", "dropped", "submitted",
     "cpu_cores", "oracle_msgs_per_sec", "block_msgs_per_sec",
-    "block_over_oracle",
+    "block_over_oracle", "pallas_msgs_per_sec", "pallas_over_block",
+    "pallas_over_oracle", "pallas_exact",
 }
 
 

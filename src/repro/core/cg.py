@@ -125,6 +125,14 @@ class CGConfig(NamedTuple):
     d_tail: int = 2               # tail-key probe budget
     hh_headroom: float = 2.0      # probe-depth schedule slack over the
                                   # Eq.-2 spread ceil(p·n/(1+eps))
+    engine: str = "auto"          # block-engine implementation for the
+                                  # PORC inner scheme: "ref" (jnp scan),
+                                  # "pallas" (Pallas kernel, bit-identical
+                                  # — load/delta/sketch lanes in VMEM),
+                                  # "auto" = Pallas on TPU, jnp elsewhere.
+                                  # Applies to the block path only; the
+                                  # block_size=0 sequential oracle and
+                                  # KG/SG ignore it.
 
 
 class CGState(NamedTuple):
@@ -294,9 +302,11 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, sketch, keys):
             sketch_base=sketch,
             sketch_delta=None if sketch is None else jnp.zeros(
                 (cfg.n_sources,) + sketch.shape, jnp.float32))
+        from repro.kernels import resolve_engine
         vw, state = ref_porc_multisource(
             keys, V, cfg.n_sources, sync_every=cfg.sync_every,
-            block=cfg.block_size, eps=cfg.eps, state=state, policy=policy)
+            block=cfg.block_size, eps=cfg.eps, state=state, policy=policy,
+            engine=resolve_engine(cfg.engine))
         sketch = (None if state.sketch_base is None
                   else state.sketch_base + state.sketch_delta.sum(0))
         return state.base + state.delta.sum(0), sketch, vw
@@ -306,10 +316,12 @@ def _route_slot(cfg: CGConfig, vw_load, t_offset, sg_ptr, sketch, keys):
         # against per-block load snapshots (eventually-consistent, the
         # kernels' block-synchronous semantics). Bit-identical to the
         # sequential path below when block_size == 1.
+        from repro.kernels import resolve_engine
         from repro.kernels.ref import PorcState, ref_porc_route
         state = PorcState(load=vw_load, routed=t_offset, sketch=sketch)
         vw, state = ref_porc_route(keys, V, block=cfg.block_size,
-                                   eps=cfg.eps, state=state, policy=policy)
+                                   eps=cfg.eps, state=state, policy=policy,
+                                   engine=resolve_engine(cfg.engine))
         return state.load, state.sketch, vw
 
     # PoRC (Alg. 1) continuing across slots: capacity uses global time.

@@ -16,8 +16,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-_GAMMA_HI = jnp.uint32(0x9E3779B9)
-_GAMMA_LO = jnp.uint32(0x7F4A7C15)
+# plain Python ints, wrapped per call: a module-level jnp.uint32 would
+# be a concrete device array, which a Pallas kernel body cannot close
+# over (captured-constant error) — the whole hash family must stay
+# traceable inside kernels.
+_GAMMA_HI = 0x9E3779B9
+_GAMMA_LO = 0x7F4A7C15
 
 
 def _mix32(x: jnp.ndarray) -> jnp.ndarray:
@@ -35,8 +39,8 @@ def hash_u32(key: jnp.ndarray, salt) -> jnp.ndarray:
     """Salted 32-bit hash of integer keys. Shapes broadcast."""
     k = jnp.asarray(key).astype(jnp.uint32)
     s = jnp.asarray(salt).astype(jnp.uint32)
-    h = _mix32(k + s * _GAMMA_HI)
-    h = _mix32(h ^ (s * _GAMMA_LO + jnp.uint32(0x165667B1)))
+    h = _mix32(k + s * jnp.uint32(_GAMMA_HI))
+    h = _mix32(h ^ (s * jnp.uint32(_GAMMA_LO) + jnp.uint32(0x165667B1)))
     return h
 
 

@@ -207,12 +207,17 @@ def power_of_two_choices_blocked(keys: jnp.ndarray, n_bins: int,
 
 def power_of_random_choices_blocked(keys: jnp.ndarray, n_bins: int,
                                     eps: float = 0.01,
-                                    block: int = 128) -> jnp.ndarray:
+                                    block: int = 128,
+                                    engine: str = "ref") -> jnp.ndarray:
     """Batched PoRC: Alg. 1 against a per-block load snapshot, capacity
     evaluated at the block boundary. Delegates to the kernel block
-    engine (``repro.kernels.ref``), which carries state across blocks."""
-    from repro.kernels.ref import ref_porc_route  # deferred: core ← kernels
-    assign, _ = ref_porc_route(keys, n_bins, block=block, eps=eps)
+    engine (``repro.kernels.ref``), which carries state across blocks.
+    ``engine``: "ref" (jnp scan) | "pallas" (Pallas kernel, bit-identical)
+    | "auto" (Pallas on TPU, jnp elsewhere)."""
+    from repro.kernels import resolve_engine  # deferred: core ← kernels
+    from repro.kernels.ref import ref_porc_route
+    assign, _ = ref_porc_route(keys, n_bins, block=block, eps=eps,
+                               engine=resolve_engine(engine))
     return assign
 
 
@@ -220,18 +225,22 @@ def power_of_random_choices_multisource(keys: jnp.ndarray, n_bins: int,
                                         n_sources: int, eps: float = 0.01,
                                         block: int = 128,
                                         sync_every: int = 1,
-                                        hh=None) -> jnp.ndarray:
+                                        hh=None,
+                                        engine: str = "ref") -> jnp.ndarray:
     """Multi-source PoRC (§V-C): the stream splits round-robin across
     ``n_sources`` sources, each routing blocks against its local load
     view (shared merged base + own unpublished delta); views synchronize
     by delta-merge every ``sync_every`` blocks. ``n_sources=1,
     sync_every=1`` is bit-identical to the blocked single-source path.
     ``hh`` (an ``HHPolicy``) turns on heavy-hitter-aware probe depths;
-    the per-source sketch deltas merge on the same sync cadence."""
-    from repro.kernels.ref import ref_porc_multisource  # deferred: core ← kernels
+    the per-source sketch deltas merge on the same sync cadence.
+    ``engine`` selects the block engine ("ref" | "pallas" | "auto")."""
+    from repro.kernels import resolve_engine  # deferred: core ← kernels
+    from repro.kernels.ref import ref_porc_multisource
     assign, _ = ref_porc_multisource(keys, n_bins, n_sources,
                                      sync_every=sync_every, block=block,
-                                     eps=eps, policy=hh)
+                                     eps=eps, policy=hh,
+                                     engine=resolve_engine(engine))
     return assign
 
 
@@ -240,16 +249,18 @@ def power_of_random_choices_multisource(keys: jnp.ndarray, n_bins: int,
 # ---------------------------------------------------------------------------
 
 def _hh_choices(keys: jnp.ndarray, n_bins: int, scheme: str, eps: float,
-                block: int, hh) -> jnp.ndarray:
-    from repro.kernels.ref import HHPolicy, ref_porc_route  # core ← kernels
+                block: int, hh, engine: str = "ref") -> jnp.ndarray:
+    from repro.kernels import resolve_engine  # deferred: core ← kernels
+    from repro.kernels.ref import HHPolicy, ref_porc_route
     policy = HHPolicy(scheme=scheme) if hh is None else hh._replace(scheme=scheme)
     assign, _ = ref_porc_route(keys, n_bins, block=block, eps=eps,
-                               policy=policy)
+                               policy=policy, engine=resolve_engine(engine))
     return assign
 
 
 def d_choices(keys: jnp.ndarray, n_bins: int, eps: float = 0.01,
-              block: int = 128, hh=None) -> jnp.ndarray:
+              block: int = 128, hh=None,
+              engine: str = "ref") -> jnp.ndarray:
     """D-Choices: PoRC block engine with per-key probe budgets — heavy
     keys (count-min estimate ≥ ``hot_fraction``·m_t) probe up to
     ``d_heavy`` salted choices, tail keys keep ``d_tail=2``. Caps the
@@ -257,17 +268,18 @@ def d_choices(keys: jnp.ndarray, n_bins: int, eps: float = 0.01,
     hottest key's balanced spread ceil(p₁·n/(1+eps)) exceeds d_heavy —
     prefer W-Choices past that point (see docs/partitioners.md).
     ``hh`` overrides the default ``HHPolicy`` knobs (scheme is forced)."""
-    return _hh_choices(keys, n_bins, "d", eps, block, hh)
+    return _hh_choices(keys, n_bins, "d", eps, block, hh, engine)
 
 
 def w_choices(keys: jnp.ndarray, n_bins: int, eps: float = 0.01,
-              block: int = 128, hh=None) -> jnp.ndarray:
+              block: int = 128, hh=None,
+              engine: str = "ref") -> jnp.ndarray:
     """W-Choices: like D-Choices but a heavy key's probe ceiling is the
     full worker set, with the budget still set per key by the Eq.-2
     schedule ceil(headroom·p̂·n/(1+eps)) — tail replication stays at
     d_tail while the few heavy keys spread just wide enough to balance.
     ``hh`` overrides the default ``HHPolicy`` knobs (scheme is forced)."""
-    return _hh_choices(keys, n_bins, "w", eps, block, hh)
+    return _hh_choices(keys, n_bins, "w", eps, block, hh, engine)
 
 
 # ---------------------------------------------------------------------------
@@ -331,7 +343,8 @@ def consistent_hashing_bounded(keys: jnp.ndarray, n_bins: int,
 
 def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
           eps: float = 0.01, block_size: int | None = None,
-          sources: int = 1, sync_every: int = 1, hh=None) -> jnp.ndarray:
+          sources: int = 1, sync_every: int = 1, hh=None,
+          engine: str = "ref") -> jnp.ndarray:
     """Route a full stream with the named scheme (paper Table II symbols).
 
     ``block_size=None`` uses the exact sequential oracles (one message
@@ -353,12 +366,25 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
     ``block_size=None`` means the default block of 128; both accept
     ``sources > 1``. ``hh`` (a ``kernels.ref.HHPolicy``) overrides the
     sketch/budget knobs for them and is rejected for every other scheme.
+
+    ``engine`` selects the block-engine implementation for the PoRC
+    family (PORC blocked/multisource and DCHOICES/WCHOICES): ``"ref"``
+    (the jnp scan — the default), ``"pallas"`` (the Pallas kernel,
+    bit-identical: load/delta/sketch lanes in VMEM scratch, compiled on
+    TPU and interpreted elsewhere), or ``"auto"`` (Pallas on TPU, jnp
+    elsewhere). The sequential oracles and the non-PoRC schemes have no
+    kernel variant and reject a non-"ref" engine.
     """
     scheme = scheme.upper()
     if sources > 1 and scheme not in ("PORC", "KG", "SG") + HH_SCHEMES:
         raise ValueError(f"scheme {scheme!r} has no multi-source variant")
     if hh is not None and scheme not in HH_SCHEMES:
         raise ValueError(f"scheme {scheme!r} takes no heavy-hitter policy")
+    if engine != "ref" and scheme not in ("PORC",) + HH_SCHEMES:
+        raise ValueError(f"scheme {scheme!r} has no kernel engine variant")
+    if engine != "ref" and scheme == "PORC" and not (block_size or sources > 1):
+        raise ValueError("engine applies to the block path — pass "
+                         "block_size (the sequential oracle is jnp-only)")
     if scheme in HH_SCHEMES:
         from repro.kernels.ref import HHPolicy  # deferred: core ← kernels
         letter = "d" if scheme == "DCHOICES" else "w"
@@ -367,8 +393,9 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
                       else hh._replace(scheme=letter))
             return power_of_random_choices_multisource(
                 keys, n_bins, sources, eps=eps, block=block_size or 128,
-                sync_every=sync_every, hh=policy)
-        return _hh_choices(keys, n_bins, letter, eps, block_size or 128, hh)
+                sync_every=sync_every, hh=policy, engine=engine)
+        return _hh_choices(keys, n_bins, letter, eps, block_size or 128, hh,
+                           engine)
     if scheme == "KG":
         return key_grouping(keys, n_bins)
     if scheme == "SG":
@@ -385,10 +412,11 @@ def route(scheme: str, keys: jnp.ndarray, n_bins: int, *,
         if sources > 1:
             return power_of_random_choices_multisource(
                 keys, n_bins, sources, eps=eps, block=block_size or 128,
-                sync_every=sync_every)
+                sync_every=sync_every, engine=engine)
         if block_size:
             return power_of_random_choices_blocked(keys, n_bins, eps=eps,
-                                                   block=block_size)
+                                                   block=block_size,
+                                                   engine=engine)
         return power_of_random_choices(keys, n_bins, eps=eps)
     if scheme == "CH":
         return consistent_hashing_bounded(keys, n_bins, eps=eps)

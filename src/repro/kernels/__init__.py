@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
-porc_assign — the paper's Alg. 1 routing loop (block-synchronous).
-cg_dispatch — CG MoE dispatch: capacity-bounded with overflow.
-ssd_scan    — Mamba-2 SSD chunked recurrence (assigned ssm/hybrid archs).
+porc_assign   — the paper's Alg. 1 routing loop (rank-sequential, strict cap).
+porc_snapshot — the snapshot-probing block engine (the fast path), single-
+                and multi-source, HH-policy aware — bit-identical to ``ref``.
+cg_dispatch   — CG MoE dispatch: capacity-bounded with overflow.
+ssd_scan      — Mamba-2 SSD chunked recurrence (assigned ssm/hybrid archs).
 
-``ops`` holds the public jit'd wrappers; ``ref`` the pure-jnp oracles.
+``ops`` holds the public jit'd wrappers; ``ref`` the pure-jnp oracles;
+``blocks`` the block math both engine families share; ``backend`` the
+engine/interpret auto-resolution.
 """
-from . import ops, ref  # noqa: F401
-from .ops import cg_dispatch, porc_assign, ssd_scan  # noqa: F401
+from . import backend, blocks, ops, ref  # noqa: F401
+from .backend import resolve_engine  # noqa: F401
+from .ops import cg_dispatch, porc_assign, porc_snapshot, ssd_scan  # noqa: F401

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
                      loadout_ref, load_ref, *, n_experts: int, k: int,
@@ -76,7 +78,7 @@ def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
                                              "block", "interpret"))
 def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
                 k: int, capacity: int, block: int = 128,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """Capacity-bounded MoE assignment with CG overflow.
 
     Args:
@@ -112,5 +114,5 @@ def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
             jax.ShapeDtypeStruct((n_experts,), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n_experts,), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(pref, gates)

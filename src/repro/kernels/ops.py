@@ -3,38 +3,45 @@
 On TPU the kernels compile to Mosaic; everywhere else (this CPU
 container, unit tests) they run in interpret mode, which executes the
 kernel body with real JAX ops — same semantics, validated against the
-``ref`` oracles.
+``ref`` oracles. The backend choice lives in the kernels themselves
+now (``interpret=None`` → auto, see ``kernels.backend``); these
+wrappers just re-export the auto-mode call.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .cg_dispatch import cg_dispatch as _cg_dispatch
 from .porc_assign import porc_assign as _porc_assign
+from .porc_snapshot import porc_snapshot as _porc_snapshot
 from .ssd_scan import ssd_scan as _ssd_scan
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
                 block: int = 128, eps: float = 0.05, m0: float = 0.0,
                 load0: jnp.ndarray | None = None):
-    """Block-synchronous PoRC routing (paper Alg. 1, TPU-adapted)."""
+    """Block-synchronous PoRC routing (paper Alg. 1, TPU-adapted):
+    the rank-sequential strict-cap kernel."""
     return _porc_assign(keys, n_bins, d=d, block=block, eps=eps, m0=m0,
-                        load0=load0, interpret=not _on_tpu())
+                        load0=load0)
+
+
+def porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
+                  eps: float = 0.05, chunk: int = 8, m0: float = 0.0,
+                  load0: jnp.ndarray | None = None):
+    """Snapshot-probing PoRC block engine (the fast path) as a Pallas
+    kernel — bit-identical to ``ref.ref_porc_snapshot``."""
+    return _porc_snapshot(keys, n_bins, block=block, eps=eps, chunk=chunk,
+                          m0=m0, load0=load0)
 
 
 def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
                 k: int, capacity: int, block: int = 128):
     """Capacity-bounded MoE assignment with CG overflow."""
     return _cg_dispatch(pref, gates, n_experts=n_experts, k=k,
-                        capacity=capacity, block=block,
-                        interpret=not _on_tpu())
+                        capacity=capacity, block=block)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
     """Mamba-2 SSD chunked scan."""
-    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)

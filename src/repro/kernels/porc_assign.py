@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 def _mix32(x):
     x = x ^ (x >> 16)
     x = x * jnp.uint32(0x85EBCA6B)
@@ -97,7 +99,7 @@ def _porc_kernel(m0_ref, load0_ref, keys_ref, assign_ref, loadout_ref,
 def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
                 block: int = 128, eps: float = 0.05, m0: float = 0.0,
                 load0: jnp.ndarray | None = None,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """Block-synchronous PoRC over a key stream.
 
     Args:
@@ -108,6 +110,7 @@ def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
       m0: messages already routed before this call (continuation).
       load0: [n_bins] f32 per-bin loads carried in from a previous call
         (continuation); zeros when omitted.
+      interpret: None → auto (compiled on TPU, interpreter elsewhere).
     Returns (assignment [M] int32, final_load [n_bins] f32).
     """
     if d is None:
@@ -137,6 +140,6 @@ def porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
             jax.ShapeDtypeStruct((n_bins,), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n_bins,), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(m0_arr, load0_arr, keys)
     return assign, load

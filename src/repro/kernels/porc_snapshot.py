@@ -1,0 +1,280 @@
+"""Pallas snapshot-probing PoRC block engine (single- and multi-source).
+
+The fast-path semantics of ``ref.ref_porc_snapshot`` /
+``ref.ref_porc_multisource`` as sequential-grid Pallas kernels: the
+load vector (and, multisource, the per-source delta lanes and count-min
+sketch lanes) lives in **VMEM scratch** and is carried across the grid,
+so per block the only HBM traffic is the keys in and the assignments
+out. Candidate hashing is *fused into the probe scan* — the salted
+chain is hashed inside the kernel body right before it is resolved
+against the snapshot, instead of materializing a [M, chain] candidate
+tensor in HBM the way the jnp path hoists it. That fusion is what
+removes the ROADMAP-flagged chain-width cost of the HH policy path: a
+W-Choices chain of n_bins candidates never round-trips to memory.
+
+Bit-identity with the jnp reference engines is structural, not
+aspirational: the kernel bodies call the *same* block math
+(``kernels.blocks``: ``snapshot_block``, ``snapshot_block_hh``,
+``hh_budgets``, the sketch, and the shared capacity schedule
+``snapshot_cap``/``view_cap``) that ``kernels/ref.py`` scans over, and
+the hash family in ``core.hashing`` is written to trace inside a kernel
+body. The parity tests (``tests/test_porc_snapshot_pallas.py``) and the
+CI gate pin this in interpret mode; on TPU the same program compiles to
+Mosaic.
+
+Grid: (M // block,), sequential. Scratch: load [n_bins] f32 (+
+delta [S, n_bins], sketch lanes when multisource / HH policy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hashing import hash_to_bins
+
+from . import blocks
+from .backend import resolve_engine, resolve_interpret  # noqa: F401
+from .blocks import HHPolicy
+
+
+# ---------------------------------------------------------------------------
+# Single source — the ``ref_porc_snapshot`` kernel
+# ---------------------------------------------------------------------------
+
+def _snapshot_kernel(m0_ref, load0_ref, keys_ref, assign_ref, loadout_ref,
+                     load_scr, *,
+                     n_bins: int, block: int, eps: float, chunk: int,
+                     n_blocks: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        load_scr[...] = load0_ref[...]
+
+    load = load_scr[...]
+    kblk = keys_ref[...]
+    cap = blocks.snapshot_cap(eps, n_bins, m0_ref[0],
+                              b.astype(jnp.float32), block)
+    # fused candidate hashing: the first chunk of the salted chain,
+    # hashed in-kernel (the jnp path hoists the same values to HBM)
+    cand = hash_to_bins(kblk[:, None], blocks.probe_salts(chunk)[None, :],
+                        n_bins)
+    assign = blocks.snapshot_block(load, cap, kblk, cand, n_bins, block,
+                                   chunk)
+    assign_ref[...] = assign
+    load_scr[...] = load.at[assign].add(1.0)
+
+    @pl.when(b == n_blocks - 1)
+    def _flush():
+        loadout_ref[...] = load_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "eps",
+                                             "chunk", "interpret"))
+def porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
+                  eps: float = 0.05, chunk: int = 8,
+                  load0: jnp.ndarray | None = None, m0: float = 0.0,
+                  interpret: bool | None = None):
+    """Snapshot-probing PoRC as a Pallas kernel — drop-in for
+    ``ref.ref_porc_snapshot`` (same signature, bit-identical result).
+
+    Every block probes the frozen VMEM load snapshot with its salted
+    chain (hashed in-kernel) against the capacity
+    (1+eps)·m_t/n_bins at block end; at block=1 the full 4·n_bins lazy
+    chain of Alg. 1 runs, so the kernel is bit-identical to the
+    sequential oracle. ``interpret=None`` → auto (compiled on TPU).
+
+    Returns (assignment [M] int32, final load [n_bins] f32).
+    """
+    M = keys.shape[0]
+    assert M % block == 0, f"{M} % {block} != 0"
+    n_blocks = M // block
+    load0_arr = (jnp.zeros((n_bins,), jnp.float32) if load0 is None
+                 else load0.astype(jnp.float32))
+    if n_blocks == 0:
+        return jnp.zeros((0,), jnp.int32), load0_arr
+    kernel = functools.partial(_snapshot_kernel, n_bins=n_bins, block=block,
+                               eps=eps, chunk=chunk, n_blocks=n_blocks)
+    m0_arr = jnp.reshape(jnp.asarray(m0, jnp.float32), (1,))
+    assign, load = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((n_bins,), lambda b: (0,)),
+            pl.BlockSpec((block,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec((n_bins,), lambda b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_bins,), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(m0_arr, load0_arr, keys)
+    return assign, load
+
+
+# ---------------------------------------------------------------------------
+# Multi-source — the ``_porc_multisource_scan`` kernel (delta + sketch
+# lanes in scratch, piggyback merge on the sync cadence)
+# ---------------------------------------------------------------------------
+
+def _multisource_kernel(*refs, n_bins: int, n_sources: int, block: int,
+                        sync_every: int, eps: float, chunk: int,
+                        chunk_eff: int, n_blocks: int,
+                        policy: HHPolicy | None):
+    S = n_sources
+    if policy is None:
+        (ticks_ref, base0_ref, delta0_ref, keys_ref,
+         assign_ref, baseout_ref, deltaout_ref,
+         base_scr, delta_scr) = refs
+    else:
+        (ticks_ref, base0_ref, delta0_ref, skb0_ref, skd0_ref, keys_ref,
+         assign_ref, baseout_ref, deltaout_ref, skbout_ref, skdout_ref,
+         base_scr, delta_scr, skb_scr, skd_scr) = refs
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        base_scr[...] = base0_ref[...]
+        delta_scr[...] = delta0_ref[...]
+        if policy is not None:
+            skb_scr[...] = skb0_ref[...]
+            skd_scr[...] = skd0_ref[...]
+
+    base, delta = base_scr[...], delta_scr[...]
+    kblk = keys_ref[0]                                 # [S, block]
+    # same local-view capacity as the jnp scan (see the long rationale
+    # in ref._porc_multisource_scan): per-source mass, aggregate
+    # lookahead of one block across the S sources
+    mass = base.sum() + delta.sum(1)                   # [S]
+    cap = blocks.view_cap(eps, n_bins, mass, block / S)
+    views = base[None, :] + delta                      # [S, n_bins]
+    # fused candidate hashing — for the policy path this chain is up to
+    # n_bins wide and never leaves the kernel
+    cand = hash_to_bins(kblk[..., None], blocks.probe_salts(chunk_eff),
+                        n_bins)
+    if policy is None:
+        assign = jax.vmap(
+            lambda view, c, kk, cb: blocks.snapshot_block(
+                view, c, kk, cb, n_bins, block, chunk))(
+            views, cap, kblk, cand)                    # [S, block]
+    else:
+        skb, skd = skb_scr[...], skd_scr[...]
+        est = jax.vmap(
+            lambda d, k: blocks.hh_sketch_query(policy, skb + d, k))(
+            skd, kblk)                                 # [S, block]
+        bud = blocks.hh_budgets(policy, n_bins, eps, est, mass[:, None])
+        assign = jax.vmap(
+            lambda view, c, kk, cb, bd: blocks.snapshot_block_hh(
+                view, c, kk, cb, bd, n_bins,
+                policy.rotate_duplicates, policy.spread_fallback))(
+            views, cap, kblk, cand, bud)
+        skd = jax.vmap(lambda d, k: blocks.hh_sketch_update(policy, d, k))(
+            skd, kblk)
+    delta = jax.vmap(lambda d, a: d.at[a].add(1.0))(delta, assign)
+    # piggyback merge — phase continues from ticks across calls
+    sync = ((ticks_ref[0] + b + 1) % sync_every) == 0
+    base = jnp.where(sync, base + delta.sum(0), base)
+    delta = jnp.where(sync, jnp.zeros_like(delta), delta)
+    assign_ref[0] = assign
+    base_scr[...], delta_scr[...] = base, delta
+    if policy is not None:
+        skb = jnp.where(sync, skb + skd.sum(0), skb)
+        skd = jnp.where(sync, jnp.zeros_like(skd), skd)
+        skb_scr[...], skd_scr[...] = skb, skd
+
+    @pl.when(b == n_blocks - 1)
+    def _flush():
+        baseout_ref[...] = base_scr[...]
+        deltaout_ref[...] = delta_scr[...]
+        if policy is not None:
+            skbout_ref[...] = skb_scr[...]
+            skdout_ref[...] = skd_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bins", "n_sources", "sync_every", "block", "eps", "chunk", "policy",
+    "interpret"))
+def porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
+                          sync_every: int, block: int, eps: float,
+                          chunk: int, base0, delta0, ticks0,
+                          skb0=None, skd0=None,
+                          policy: HHPolicy | None = None,
+                          interpret: bool | None = None):
+    """Pallas counterpart of ``ref._porc_multisource_scan``: the core
+    multi-source scan over full per-source blocks, same argument order
+    and the same ``(assign, base, delta, ticks, skb, skd)`` return, so
+    ``ref_porc_multisource(engine="pallas")`` swaps it in per span.
+
+    One grid step routes one block per source against its local view
+    ``base + delta[s]`` (delta lanes in VMEM scratch), merges the lanes
+    every ``sync_every`` steps, and — with a ``policy`` — carries the
+    count-min sketch base/delta lanes in scratch on the same cadence.
+    """
+    S = n_sources
+    M = keys.shape[0]
+    assert M % (S * block) == 0, f"{M} % {S}*{block} != 0"
+    nb = M // (S * block)
+    # [nb, S, block]: source s's k-th message of its b-th block
+    kb = keys.reshape(nb, block, S).transpose(0, 2, 1)
+    chunk_eff = (chunk if policy is None
+                 else blocks.hh_chunk(policy, chunk, n_bins))
+    kernel = functools.partial(
+        _multisource_kernel, n_bins=n_bins, n_sources=S, block=block,
+        sync_every=sync_every, eps=eps, chunk=chunk, chunk_eff=chunk_eff,
+        n_blocks=nb, policy=policy)
+    ticks_arr = jnp.reshape(jnp.asarray(ticks0, jnp.int32), (1,))
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((n_bins,), lambda b: (0,)),
+        pl.BlockSpec((S, n_bins), lambda b: (0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, S, block), lambda b: (b, 0, 0)),
+        pl.BlockSpec((n_bins,), lambda b: (0,)),
+        pl.BlockSpec((S, n_bins), lambda b: (0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, S, block), jnp.int32),
+        jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        jax.ShapeDtypeStruct((S, n_bins), jnp.float32),
+    ]
+    scratch = [pltpu.VMEM((n_bins,), jnp.float32),
+               pltpu.VMEM((S, n_bins), jnp.float32)]
+    operands = [ticks_arr, base0, delta0]
+    if policy is not None:
+        D, W = policy.depth, policy.width
+        in_specs += [pl.BlockSpec((D, W), lambda b: (0, 0)),
+                     pl.BlockSpec((S, D, W), lambda b: (0, 0, 0))]
+        out_specs += [pl.BlockSpec((D, W), lambda b: (0, 0)),
+                      pl.BlockSpec((S, D, W), lambda b: (0, 0, 0))]
+        out_shape += [jax.ShapeDtypeStruct((D, W), jnp.float32),
+                      jax.ShapeDtypeStruct((S, D, W), jnp.float32)]
+        scratch += [pltpu.VMEM((D, W), jnp.float32),
+                    pltpu.VMEM((S, D, W), jnp.float32)]
+        operands += [skb0, skd0]
+    in_specs.append(pl.BlockSpec((1, S, block), lambda b: (b, 0, 0)))
+    operands.append(kb)
+    outs = pl.pallas_call(
+        kernel, grid=(nb,),
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+    if policy is None:
+        assign, base, delta = outs
+        skb = skd = None
+    else:
+        assign, base, delta, skb, skd = outs
+    # invert the round-robin interleave back to global message order
+    return (assign.transpose(0, 2, 1).reshape(-1), base, delta,
+            (ticks0 + nb) % sync_every, skb, skd)

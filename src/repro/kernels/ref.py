@@ -20,6 +20,29 @@ import jax.numpy as jnp
 
 from repro.core.hashing import hash_to_bins
 
+# The block-engine inner math lives in kernels/blocks.py so the jnp
+# reference engines here and the Pallas engines in porc_snapshot.py
+# consume literally the same implementation. Re-exported under the
+# historical names — every external import site says
+# ``from repro.kernels.ref import X`` and keeps working.
+from .blocks import (  # noqa: F401  (re-exports)
+    HHPolicy,
+    SKETCH_SALT0 as _SKETCH_SALT0,
+    hh_budgets as _hh_budgets,
+    hh_chunk as _hh_chunk,
+    hh_sketch_init,
+    hh_sketch_query,
+    hh_sketch_update,
+    neutral_hh_policy,
+    probe_salts,
+    sketch_cols as _sketch_cols,
+    snapshot_block as _snapshot_block,
+    snapshot_block_hh as _snapshot_block_hh,
+    snapshot_cap,
+    snapshot_resolve as _snapshot_resolve,
+    view_cap,
+)
+
 
 # ---------------------------------------------------------------------------
 # PoRC, block-synchronous semantics
@@ -86,7 +109,7 @@ def ref_porc_assign(keys: jnp.ndarray, n_bins: int, *, d: int | None = None,
 
     def blk(load, xs):
         b, keys_blk = xs
-        cap = (1.0 + eps) * (m0 + (b + 1.0) * block) / n_bins
+        cap = snapshot_cap(eps, n_bins, m0, b, block)
         load, assign = _porc_block(load, keys_blk, cap, n_bins, d)
         return load, assign
 
@@ -152,52 +175,6 @@ def block_spans(m: int, block: int) -> list[tuple[int, int, int]]:
     return spans
 
 
-def _snapshot_resolve(load, cap, cand, salts, assign, max_probes):
-    ok = (load[cand] < cap) & (salts <= max_probes)[None, :]
-    first = jnp.argmax(ok, axis=1)
-    pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
-    hit = (assign < 0) & jnp.any(ok, axis=1)
-    return jnp.where(hit, pick, assign)
-
-
-def _snapshot_block(load, cap, kblk, cand0, n_bins: int, block: int,
-                    chunk: int):
-    """Route one block of keys against a frozen load snapshot.
-
-    The single routing semantics shared by ``ref_porc_snapshot`` (one
-    source, snapshot = running load) and ``ref_porc_multisource`` (one
-    snapshot per source = merged base + own delta): each key walks its
-    salted-probe chain against ``load`` and stops at the first bin below
-    ``cap``. At block=1 the full 4·n_bins chain of Alg. 1 runs (lazily,
-    in chunks of ``chunk`` salts); at block>1 the budget is the ``chunk``
-    pre-hashed candidates in ``cand0``. Exhausting the budget falls back
-    to the least-loaded snapshot bin (Alg. 1's fallback).
-    """
-    max_probes = 4 * n_bins
-    salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
-    assign = _snapshot_resolve(load, cap, cand0, salts0,
-                               jnp.full((block,), -1, jnp.int32), max_probes)
-
-    if block == 1:
-        # exactness: continue the salted chain to the oracle ceiling
-        def cond(c):
-            salt0, assign = c
-            return (salt0 <= max_probes) & jnp.any(assign < 0)
-
-        def probe_chunk(c):
-            salt0, assign = c
-            salts = salt0 + jnp.arange(chunk, dtype=jnp.uint32)
-            cand = hash_to_bins(kblk[:, None], salts[None, :], n_bins)
-            return salt0 + chunk, _snapshot_resolve(load, cap, cand, salts,
-                                                    assign, max_probes)
-
-        _, assign = jax.lax.while_loop(
-            cond, probe_chunk, (jnp.uint32(1 + chunk), assign))
-
-    # probe budget exhausted: least-loaded snapshot bin (Alg. 1)
-    return jnp.where(assign < 0, jnp.argmin(load).astype(jnp.int32), assign)
-
-
 @functools.partial(jax.jit, static_argnames=("n_bins", "block", "eps", "chunk"))
 def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
                       eps: float = 0.05, chunk: int = 8,
@@ -237,222 +214,18 @@ def ref_porc_snapshot(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     load = jnp.zeros(n_bins, jnp.float32) if load0 is None else load0
     # the first chunk of candidates is load-independent → hoist the
     # hashing for the whole stream out of the per-block scan
-    salts0 = jnp.arange(1, chunk + 1, dtype=jnp.uint32)
+    salts0 = probe_salts(chunk)
     cand0 = hash_to_bins(kb[:, :, None], salts0[None, None, :], n_bins)
 
     def blk(load, xs):
         b, kblk, cblk = xs
-        cap = (1.0 + eps) * (m0 + (b + 1.0) * block) / n_bins
+        cap = snapshot_cap(eps, n_bins, m0, b, block)
         assign = _snapshot_block(load, cap, kblk, cblk, n_bins, block, chunk)
         return load.at[assign].add(1.0), assign
 
     load, assign = jax.lax.scan(blk, load,
                                 (jnp.arange(nb, dtype=jnp.float32), kb, cand0))
     return assign.reshape(-1), load
-
-
-# ---------------------------------------------------------------------------
-# Heavy-hitter-aware probe depth — D-Choices / W-Choices
-# (arXiv:1510.05714 "When Two Choices Are not Enough")
-# ---------------------------------------------------------------------------
-
-class HHPolicy(NamedTuple):
-    """Static per-key probe-depth policy driven by a count-min sketch.
-
-    PoRC gives every key the same probe budget; at scale the few heavy
-    keys need *many* choices while the long tail needs only two — that
-    is what bounds imbalance and replication simultaneously. The policy
-    classifies each key against a device-resident count-min sketch at
-    the block boundary (snapshot semantics, like the load itself) and
-    assigns a per-key probe budget:
-
-    * **tail** (estimate < ``hot_fraction`` · routed mass): ``d_tail``
-      salted choices; on cap exhaustion the key falls back to the
-      least-loaded bin *among its own candidates* (PKG-style), so a
-      tail key is ever stored on at most ``d_tail`` bins.
-    * **heavy**: the probe-depth schedule
-      ``d_tail + ceil(headroom · p̂ · n/(1+eps))`` — the Eq.-2 minimum
-      spread a key of estimated share p̂ needs, with slack — clipped to
-      ``d_heavy`` under scheme ``"d"`` (D-Choices) or to ``n_bins``
-      under ``"w"`` (W-Choices: the full choice set).
-
-    A key whose budget exceeds the materialized candidate chain is
-    entitled to more choices than were hashed: it falls back to the
-    *full* choice set (the least-loaded bins, spread in load order so a
-    hot key's block never piles onto a single bin;
-    ``spread_fallback=False`` keeps the plain engine's single-argmin
-    fallback instead). That rule makes the *neutral* policy —
-    ``hot_fraction >= 1`` (threshold off) with ``d_tail`` above the
-    chain length and ``spread_fallback=False`` — bit-identical to the
-    plain snapshot engine at block > 1: the CI parity gate.
-
-    All fields are Python scalars, so the policy is hashable and rides
-    as a static jit argument; ``None`` policy compiles to exactly the
-    sketch-free engine.
-    """
-    scheme: str = "d"            # "d": heavy depth capped at d_heavy;
-                                 # "w": cap lifted to n_bins (full set)
-    depth: int = 4               # sketch rows (independent hashes)
-    width: int = 4096            # sketch columns per row; keep width
-                                 # >= ~4/hot_fraction so collision noise
-                                 # (~m/width per row) stays below the
-                                 # heavy threshold
-    hot_fraction: float = 1e-3   # heavy when est >= hot_fraction * m_t
-    d_heavy: int = 32            # probe-depth ceiling for heavy keys
-                                 # under scheme "d"
-    d_tail: int = 2              # probe budget for tail keys
-    headroom: float = 2.0        # schedule slack over the Eq.-2
-                                 # minimum spread ceil(p·n/(1+eps))
-    chain: int = 0               # materialized candidates per key; 0 =
-                                 # auto (the scheme ceiling, so every
-                                 # budget is candidate-bounded). Budgets
-                                 # beyond the chain fall back to the
-                                 # full choice set.
-    rotate_duplicates: bool = True  # the r-th in-block duplicate of a
-                                 # key starts probing at candidate r of
-                                 # its window, so a hot key's block
-                                 # doesn't pile onto one snapshot bin
-                                 # (False: plain first-fit — parity)
-    spread_fallback: bool = True # full-choice-set fallback spreads over
-                                 # the least-loaded bins in load order
-                                 # (False: single argmin bin — the plain
-                                 # engine's fallback, the parity config)
-
-
-def neutral_hh_policy(n_bins: int, **kw) -> HHPolicy:
-    """The policy that routes bit-identically to the plain engine at
-    block > 1 (threshold off, tail budget beyond the chain, first-fit
-    order, argmin fallback) while still exercising the whole
-    sketch/budget machinery — the CI parity configuration."""
-    return HHPolicy(scheme="w", hot_fraction=2.0, d_tail=4 * n_bins + 1,
-                    chain=1, rotate_duplicates=False,
-                    spread_fallback=False, **kw)
-
-
-# sketch hashes live in their own salt space, disjoint from the probe
-# chain's small consecutive salts
-_SKETCH_SALT0 = 0x5EEDC0DE
-
-
-def _sketch_cols(policy: HHPolicy, keys: jnp.ndarray) -> jnp.ndarray:
-    salts = _SKETCH_SALT0 + jnp.arange(policy.depth, dtype=jnp.uint32)
-    return hash_to_bins(keys[..., None], salts, policy.width)
-
-
-def hh_sketch_init(policy: HHPolicy) -> jnp.ndarray:
-    """Zeroed count-min counts [depth, width]."""
-    return jnp.zeros((policy.depth, policy.width), jnp.float32)
-
-
-def hh_sketch_update(policy: HHPolicy, counts: jnp.ndarray,
-                     keys: jnp.ndarray,
-                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Add ``keys`` (optionally weighted) into the sketch. The sketch is
-    *linear*: updating with two streams in any order — or merging two
-    sketches by addition — equals updating with the concatenation,
-    which is exactly why it threads through the multi-source
-    delta-merge path unchanged."""
-    cols = _sketch_cols(policy, keys)                       # [..., depth]
-    w = (jnp.ones(keys.shape, jnp.float32) if weights is None
-         else weights.astype(jnp.float32))
-    return counts.at[jnp.arange(policy.depth), cols].add(w[..., None])
-
-
-def hh_sketch_query(policy: HHPolicy, counts: jnp.ndarray,
-                    keys: jnp.ndarray) -> jnp.ndarray:
-    """Estimated count per key: min over rows (never underestimates)."""
-    cols = _sketch_cols(policy, keys)
-    return counts[jnp.arange(policy.depth), cols].min(-1)
-
-
-def _hh_budgets(policy: HHPolicy, n_bins: int, eps: float,
-                est: jnp.ndarray, mass) -> jnp.ndarray:
-    """Per-key probe budgets: the probe-depth schedule.
-
-    ``est`` are sketch estimates, ``mass`` the routed message mass the
-    estimates are measured against (broadcastable). Tail keys get
-    ``d_tail``; heavy keys get the Eq.-2-derived spread, clipped to the
-    scheme's ceiling (``d_heavy`` for "d", ``n_bins`` for "w").
-    """
-    mass = jnp.maximum(jnp.asarray(mass, jnp.float32), 1.0)
-    heavy = est >= policy.hot_fraction * mass
-    need = jnp.ceil(policy.headroom * (est / mass) * n_bins / (1.0 + eps))
-    ceiling = max(n_bins if policy.scheme == "w" else policy.d_heavy,
-                  policy.d_tail + 1)
-    bud = jnp.clip(need.astype(jnp.int32) + policy.d_tail,
-                   policy.d_tail + 1, ceiling)
-    return jnp.where(heavy, bud, jnp.int32(policy.d_tail))
-
-
-def _hh_chunk(policy: HHPolicy, chunk: int, n_bins: int) -> int:
-    """Candidates to materialize per key: by default the chain covers
-    the scheme's budget ceiling (``d_heavy`` for "d", ``n_bins`` for
-    "w") so every policy budget is candidate-bounded — a heavy key's
-    replication then stays confined to its own salted chain instead of
-    leaking onto whichever bins happen to be least loaded per block.
-    ``policy.chain`` overrides the ceiling (the neutral/parity config
-    pins it to the plain engine's chunk)."""
-    ceiling = policy.chain or (n_bins if policy.scheme == "w"
-                               else policy.d_heavy)
-    return max(chunk, min(ceiling, n_bins))
-
-
-def _snapshot_block_hh(load, cap, kblk, cand, bud, n_bins: int,
-                       rotate: bool, spread: bool):
-    """Route one block against a frozen snapshot with per-key budgets.
-
-    Each key probes its salted candidates in order and stops at the
-    first bin below ``cap``, exactly like ``_snapshot_block``, but only
-    its first ``bud[k]`` candidates are admissible. With ``rotate``,
-    the r-th in-block duplicate of a key starts probing at offset r of
-    its admissible window (wrapping), so a hot key's block spreads over
-    its under-cap candidates instead of piling onto the first one the
-    frozen snapshot shows as free. On exhaustion:
-    * budget within the materialized chain → least-loaded bins among
-      the key's own admissible candidates, duplicates rotated across
-      the load order (bounds its replication at bud),
-    * budget beyond the chain (a tail budget set past the chain — the
-      neutral/parity config) → the full choice set: least-loaded bins
-      spread in load order (``spread``), or the single argmin bin.
-    """
-    B, C = cand.shape
-    idx = jnp.arange(C)
-    window = jnp.minimum(bud, C)                       # admissible width
-    admissible = idx[None, :] < window[:, None]
-    ok = (load[cand] < cap) & admissible
-    if rotate:
-        i = jnp.arange(B)
-        eq = kblk[:, None] == kblk[None, :]
-        dup = (eq & (i[None, :] < i[:, None])).sum(1)  # in-block dup rank
-        count = eq.sum(1)                              # in-block copies
-        # spread the key's copies evenly across its window — adjacent
-        # offsets would collide on the same first under-cap candidate
-        offset = (dup * window) // jnp.maximum(count, 1)
-        pos = jnp.mod(idx[None, :] - offset[:, None],
-                      jnp.maximum(window[:, None], 1))
-    else:
-        pos = jnp.broadcast_to(idx[None, :], (B, C))
-    first = jnp.argmin(jnp.where(ok, pos, C + 1), axis=1)
-    pick = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
-    resolved = jnp.any(ok, axis=1)
-    # bounded choice set: least-loaded among the key's own candidates.
-    # With rotation the tie is broken by a potential score load + pos,
-    # where pos is the candidate's rotated distance from the
-    # duplicate's own offset measured in messages (one step forward =
-    # one message of load) — duplicates settle into *distinct* light
-    # bins without the per-row sort a "dup-th least loaded" pick needs.
-    loadc = jnp.where(admissible, load[cand], jnp.inf)
-    fbidx = jnp.argmin(loadc + pos if rotate else loadc, axis=1)
-    candmin = jnp.take_along_axis(cand, fbidx[:, None], 1)[:, 0]
-    over = bud > C                       # entitled to the full choice set
-    if spread:
-        border = jnp.argsort(load).astype(jnp.int32)
-        leftpos = jnp.cumsum((~resolved & over).astype(jnp.int32)) - 1
-        globpick = border[leftpos % n_bins]
-    else:
-        globpick = jnp.broadcast_to(jnp.argmin(load).astype(jnp.int32), (B,))
-    fallback = jnp.where(over, globpick, candmin)
-    return jnp.where(resolved, pick, fallback)
 
 
 def route_in_spans(keys: jnp.ndarray, block: int, carry, step):
@@ -478,10 +251,15 @@ def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     """Route an arbitrary-length key stream in blocks of ``block``.
 
     ``engine="snapshot"`` (the fast path) probes block-boundary load
-    snapshots via ``ref_porc_snapshot``; ``engine="strict"`` uses the
-    rank-sequential ``ref_porc_assign``, which never exceeds the
-    (1+eps) cap but serializes in-block contention (slower — use it
-    when the ε guarantee must hold exactly, e.g. tiny per-bin loads).
+    snapshots via ``ref_porc_snapshot``; ``engine="pallas"`` runs the
+    same semantics as the Pallas kernel
+    (``porc_snapshot.porc_snapshot`` — bit-identical, load in VMEM
+    scratch, compiled on TPU / interpreted elsewhere);
+    ``engine="strict"`` uses the rank-sequential ``ref_porc_assign``,
+    which never exceeds the (1+eps) cap but serializes in-block
+    contention (slower — use it when the ε guarantee must hold exactly,
+    e.g. tiny per-bin loads). The user-facing ``"ref"``/``"auto"``
+    spellings resolve to these via ``kernels.backend.resolve_engine``.
     Either way a trailing partial block is routed as power-of-two
     sub-blocks (caps at each sub-block end, bounded recompilation —
     see ``block_spans``), so no padding keys ever pollute the load
@@ -505,7 +283,7 @@ def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
     if state is None:
         state = porc_state_init(n_bins, policy)
     if policy is not None:
-        if engine != "snapshot":
+        if engine not in ("snapshot", "pallas"):
             raise ValueError("HHPolicy requires the snapshot engine")
         skb = state.sketch if state.sketch is not None \
             else hh_sketch_init(policy)
@@ -518,12 +296,15 @@ def ref_porc_route(keys: jnp.ndarray, n_bins: int, *, block: int = 128,
             sketch_delta=jnp.zeros((1,) + skb.shape, jnp.float32))
         assign, ms = ref_porc_multisource(
             keys, n_bins, 1, sync_every=1, block=block, eps=eps,
-            state=ms, policy=policy)
+            state=ms, engine=engine, policy=policy)
         return assign, PorcState(
             load=ms.base + ms.delta.sum(0), routed=ms.routed,
             sketch=ms.sketch_base + ms.sketch_delta.sum(0))
-    eng = {"snapshot": ref_porc_snapshot,
-           "strict": ref_porc_assign}[engine]
+    if engine == "pallas":
+        from .porc_snapshot import porc_snapshot as eng  # deferred: pallas
+    else:
+        eng = {"snapshot": ref_porc_snapshot,
+               "strict": ref_porc_assign}[engine]
 
     def step(sub, blk, carry):
         load, routed = carry
@@ -623,7 +404,7 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
     if engine == "snapshot":
         chunk_eff = (chunk if policy is None
                      else _hh_chunk(policy, chunk, n_bins))
-        salts0 = jnp.arange(1, chunk_eff + 1, dtype=jnp.uint32)
+        salts0 = probe_salts(chunk_eff)
         if policy is None:
             cand0 = hash_to_bins(kb[..., None], salts0, n_bins)
             xs_extra = (cand0,)             # [nb, S, block, C] hoisted
@@ -661,7 +442,7 @@ def _porc_multisource_scan(keys: jnp.ndarray, n_bins: int, n_sources: int,
         # capacity); a full +block per source would hand the S sources
         # S·(1+eps)·block/n of joint slack on a shared hot bin.
         mass = base.sum() + delta.sum(1)                  # [S] local view
-        cap = (1.0 + eps) * (mass + block / S) / n_bins
+        cap = view_cap(eps, n_bins, mass, block / S)
         views = base[None, :] + delta                     # [S, n_bins]
         if policy is None:
             assign = route_block(views, cap, kblk, *extra)   # [S, block]
@@ -717,11 +498,10 @@ def _porc_multisource_tail(keys_pad: jnp.ndarray, n_bins: int, n_sources: int,
     S = n_sources
     active = (jnp.arange(S) < n_tail)
     chunk_eff = chunk if policy is None else _hh_chunk(policy, chunk, n_bins)
-    cand0 = hash_to_bins(keys_pad[:, None, None],
-                         jnp.arange(1, chunk_eff + 1, dtype=jnp.uint32),
+    cand0 = hash_to_bins(keys_pad[:, None, None], probe_salts(chunk_eff),
                          n_bins)
     mass = base0.sum() + delta0.sum(1)
-    cap = (1.0 + eps) * (mass + 1.0 / S) / n_bins
+    cap = view_cap(eps, n_bins, mass, 1.0 / S)
     if policy is None:
         assign = jax.vmap(
             lambda view, kblk, cblk, c: _snapshot_block(
@@ -768,7 +548,10 @@ def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
 
     ``engine`` picks the per-block router, same choice as
     ``ref_porc_route``: ``"snapshot"`` (the fast path — each block
-    probes a frozen local view) or ``"strict"`` (rank-sequential
+    probes a frozen local view), ``"pallas"`` (the same semantics as
+    the Pallas kernel ``porc_snapshot.porc_multisource_scan`` —
+    bit-identical, delta/sketch lanes in VMEM scratch; the ragged tail
+    and span driver below stay shared) or ``"strict"`` (rank-sequential
     ``_porc_block`` — in-block contention resolved against the cap,
     slower but exact inside a block; use it when per-bin loads are a
     handful of messages, e.g. Fig 11's 100-source / 1000-VW point,
@@ -799,9 +582,9 @@ def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
     new MultiSourcePorcState).
     """
     S = n_sources
-    if engine not in ("snapshot", "strict"):
+    if engine not in ("snapshot", "strict", "pallas"):
         raise ValueError(f"unknown engine {engine!r}")
-    if policy is not None and engine != "snapshot":
+    if policy is not None and engine not in ("snapshot", "pallas"):
         raise ValueError("HHPolicy requires the snapshot engine")
     if state is None:
         state = multisource_state_init(n_bins, S, policy)
@@ -818,9 +601,15 @@ def ref_porc_multisource(keys: jnp.ndarray, n_bins: int, n_sources: int, *,
     off = 0
     for _, length, blk in block_spans(per, block):
         span = keys[off: off + length * S]
-        a, base, delta, ticks, skb, skd = _porc_multisource_scan(
-            span, n_bins, S, sync_every, blk, eps, chunk, engine,
-            base, delta, ticks, skb, skd, policy)
+        if engine == "pallas":
+            from .porc_snapshot import porc_multisource_scan  # deferred
+            a, base, delta, ticks, skb, skd = porc_multisource_scan(
+                span, n_bins, S, sync_every, blk, eps, chunk,
+                base, delta, ticks, skb, skd, policy)
+        else:
+            a, base, delta, ticks, skb, skd = _porc_multisource_scan(
+                span, n_bins, S, sync_every, blk, eps, chunk, engine,
+                base, delta, ticks, skb, skd, policy)
         routed = routed + length * S
         parts.append(a)
         off += length * S

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
                 n_heads: int, chunk: int):
@@ -63,7 +65,7 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
              Bm: jnp.ndarray, Cm: jnp.ndarray, *, chunk: int = 128,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: bool | None = None) -> jnp.ndarray:
     """Chunked SSD scan. Same signature/semantics as ref.ref_ssd_scan.
 
     Args:
@@ -102,6 +104,6 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                                lambda bh, c, H=H: (bh // H, bh % H, c, 0)),
         out_shape=jax.ShapeDtypeStruct((Bsz, H, L, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(A.astype(jnp.float32), xt, dtt, bt, ct)
     return jnp.moveaxis(y, 1, 2)                   # [B, L, H, P]

@@ -127,6 +127,10 @@ class CGRequestRouter:
     sketch_depth: int = 4         # count-min rows
     sketch_width: int = 4096      # count-min columns per row
     hot_fraction: float = 1e-3    # heavy when est >= fraction of routed
+    engine: str = "auto"          # PORC block-engine implementation:
+                                  # "ref" (jnp scan) | "pallas" (Pallas
+                                  # kernel, bit-identical) | "auto" =
+                                  # Pallas on TPU, jnp elsewhere
     d_heavy: int = 32             # heavy-key probe ceiling under "d"
     d_tail: int = 2               # tail-key probe budget
     hh_headroom: float = 2.0      # schedule slack over the Eq.-2 spread
@@ -404,10 +408,12 @@ class CGRequestRouter:
         handle into replica ids."""
         keys = np.asarray(keys, np.int32)
         self._maybe_rebase()
+        from repro.kernels import resolve_engine
         assign_vw, self._state = ref_porc_multisource(
             jnp.asarray(keys), self.n_virtual, self.n_sources,
             sync_every=self.sync_every, block=self.block_size,
-            eps=self.eps, state=self._state, policy=self._policy)
+            eps=self.eps, state=self._state, policy=self._policy,
+            engine=resolve_engine(self.engine))
         self._routed += len(keys)
         return assign_vw
 
