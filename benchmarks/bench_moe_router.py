@@ -2,7 +2,10 @@
 
 Token drop fraction and expert balance: CG (capacity + overflow
 probing) vs standard capacity-bounded top-k, across router skew, at the
-two assigned MoE geometries.
+two assigned MoE geometries. The printed claim is *gated*: at skew >= 1
+CG must drop no more token-slots than top-k and keep expert-load CV no
+worse (AssertionError → the bench driver fails), and the per-row records
+feed the ci.yml moe_router gate block.
 """
 from __future__ import annotations
 
@@ -12,14 +15,14 @@ import numpy as np
 
 from repro.kernels.ref import ref_cg_dispatch
 
-from .common import fmt, table
+from .common import fmt, record, table
 
 
 def run(quick: bool = False):
     geoms = [("qwen3 128e top8", 128, 8, 16, 4096),
              ("phi3.5 16e top2", 16, 2, 6, 4096)]
     skews = (0.5, 2.0) if quick else (0.0, 0.5, 1.0, 2.0, 4.0)
-    rows = []
+    rows, failures = [], []
     for name, E, k, D, T in geoms:
         for skew in skews:
             r1, r2 = jax.random.split(jax.random.PRNGKey(int(skew * 10)))
@@ -39,14 +42,28 @@ def run(quick: bool = False):
                           (np.mean(np.asarray(l_cg)) + 1e-9))
             cv_tk = float(np.std(np.asarray(l_tk)) /
                           (np.mean(np.asarray(l_tk)) + 1e-9))
+            record("moe_router", section="sweep", geometry=name, skew=skew,
+                   drop_cg=drop_cg, drop_tk=drop_tk, cv_cg=cv_cg,
+                   cv_tk=cv_tk)
+            if skew >= 1.0:
+                if drop_cg > drop_tk + 1e-9:
+                    failures.append(f"{name} skew={skew}: CG drop "
+                                    f"{drop_cg:.4f} > top-k {drop_tk:.4f}")
+                if cv_cg > cv_tk + 1e-9:
+                    failures.append(f"{name} skew={skew}: CG load CV "
+                                    f"{cv_cg:.4f} > top-k {cv_tk:.4f}")
             rows.append([name, skew, fmt(drop_tk, 3), fmt(drop_cg, 3),
                          fmt(cv_tk, 3), fmt(cv_cg, 3)])
     print(table("CG-MoE router vs capacity-bounded top-k "
                 "(drop fraction ↓, expert-load CV ↓)",
                 ["geometry", "skew", "drop topk", "drop CG",
                  "loadCV topk", "loadCV CG"], rows))
-    print("claim: CG (the paper's overflow probing) strictly reduces "
-          "dropped token-slots and flattens expert load as skew grows")
+    if failures:
+        raise AssertionError("CG-beats-top-k claim violated: "
+                             + "; ".join(failures))
+    print("gated claim holds: CG (the paper's overflow probing) drops no "
+          "more token-slots and keeps expert load no less flat than "
+          "top-k at every skew >= 1 point")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,9 @@ _METRICS = {
     "cpu_cores", "oracle_msgs_per_sec", "block_msgs_per_sec",
     "block_over_oracle", "pallas_msgs_per_sec", "pallas_over_block",
     "pallas_over_oracle", "pallas_exact",
+    "drop_frac", "load_cv", "max_load_frac", "step_ms", "loss_first",
+    "loss_final", "loss_finite", "drop_cg", "drop_tk", "cv_cg", "cv_tk",
+    "overhead", "loss_final_cg", "loss_final_tk",
 }
 
 

@@ -19,9 +19,9 @@ import jax
 
 from . import (bench_deployment, bench_dynamic, bench_epsilon,
                bench_failures, bench_heterogeneous, bench_hh_probing,
-               bench_moe_router, bench_multihost, bench_porc_schemes,
-               bench_queue, bench_schemes_workers, bench_sources,
-               bench_virtual_workers, common, roofline)
+               bench_moe_router, bench_moe_train, bench_multihost,
+               bench_porc_schemes, bench_queue, bench_schemes_workers,
+               bench_sources, bench_virtual_workers, common, roofline)
 
 ALL = [
     ("porc_schemes", bench_porc_schemes),      # Fig 4 + block-path gate
@@ -39,6 +39,9 @@ ALL = [
     ("failures", bench_failures),              # kill-1-of-8 chaos +
                                                # migration-cost metering
     ("moe_router", bench_moe_router),          # beyond paper
+    ("moe_train", bench_moe_train),            # end-to-end MoE training:
+                                               # topk vs CG x uniform vs
+                                               # skewed expert capacity
     ("multihost", bench_multihost),            # mesh-sharded serving
                                                # across simulated hosts
     ("roofline", roofline),                    # §Roofline

@@ -32,6 +32,19 @@ for router in ("topk", "cg"):
           f"max_load_frac={float(m['max_load_frac']):.3f}")
 print("  → CG turns dropped overflow slots into next-choice assignments")
 
+print("\n=== heterogeneous expert capacity (Fig 15 on the expert axis) ===")
+# capacity_skew=3 spreads the same total slot budget geometrically so
+# cap_0/cap_{E-1} = 4 — experts on unequal hardware; overflow probing
+# absorbs what the starved experts shed instead of dropping it
+for router in ("topk", "cg"):
+    cfg = base.replace(moe=dataclasses.replace(
+        base.moe, router=router, capacity_skew=3.0))
+    y, m = moe_ffn(x, p, cfg)
+    print(f"  {router:5s} drop_frac={float(m['drop_frac']):.3f} "
+          f"max_load_frac={float(m['max_load_frac']):.3f} "
+          f"per-expert load={np.asarray(m['load']).round(1).tolist()}")
+print("  → load tracks each expert's own cap_e; CG re-routes the shed")
+
 print("\n=== one train step each on the full smoke model ===")
 for router in ("topk", "cg"):
     cfg = base.replace(moe=dataclasses.replace(base.moe, router=router))

@@ -14,6 +14,16 @@ class MoEConfig:
     capacity_factor: float = 1.25     # the paper's (1+eps) bound
     overflow_depth: int = 4           # extra PoRC probes past top_k
     router: str = "cg"                # "cg" (paper) | "topk" (drop baseline)
+    # heterogeneous expert capacity (the Fig 15 unequal-worker story on
+    # the expert axis). Exactly one of the two may be set; both unset =
+    # uniform capacity, bit-identical to the scalar pre-vector dispatch.
+    # expert_capacities: explicit per-expert buffer sizes (len n_experts,
+    # absolute token slots per group — overrides capacity_factor).
+    # capacity_skew s > 0: generated geometric profile cap_0/cap_{E-1} =
+    # 1+s at the same total budget E·C_base (see
+    # repro.moe.router.expert_capacity_vector).
+    expert_capacities: tuple[int, ...] | None = None
+    capacity_skew: float = 0.0
 
 
 @dataclass(frozen=True)

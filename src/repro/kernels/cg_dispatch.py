@@ -22,9 +22,9 @@ from jax.experimental.pallas import tpu as pltpu
 from .backend import resolve_interpret
 
 
-def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
-                     loadout_ref, load_ref, *, n_experts: int, k: int,
-                     capacity: int, block: int, n_blocks: int):
+def _dispatch_kernel(pref_ref, gates_ref, caps_ref, assign_ref, slot_ref,
+                     wts_ref, loadout_ref, load_ref, *, n_experts: int,
+                     k: int, block: int, n_blocks: int):
     b = pl.program_id(0)
 
     @pl.when(b == 0)
@@ -33,6 +33,7 @@ def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
 
     p = pref_ref[...]                                     # [B, D]
     g = gates_ref[...]
+    caps = caps_ref[...]                                  # [E] f32
     D = p.shape[1]
     load = load_ref[...]
     experts = jnp.arange(n_experts, dtype=jnp.int32)
@@ -52,7 +53,8 @@ def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
         pos = jnp.cumsum(oh, axis=0) - oh
         mypos = jnp.sum(pos * oh, axis=1)
         myload = jnp.sum(load[None, :] * oh, axis=1) + mypos
-        accept = want & (myload < capacity)
+        mycap = jnp.sum(caps[None, :] * oh, axis=1)
+        accept = want & (myload < mycap)
         col = (jnp.arange(k)[None, :] == nacc[:, None]) & accept[:, None]
         assign = jnp.where(col, c[:, None], assign)
         slot = jnp.where(col, myload.astype(jnp.int32)[:, None], slot)
@@ -77,7 +79,8 @@ def _dispatch_kernel(pref_ref, gates_ref, assign_ref, slot_ref, wts_ref,
 @functools.partial(jax.jit, static_argnames=("n_experts", "k", "capacity",
                                              "block", "interpret"))
 def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
-                k: int, capacity: int, block: int = 128,
+                k: int, capacity: int | None = None,
+                capacities: jnp.ndarray | None = None, block: int = 128,
                 interpret: bool | None = None):
     """Capacity-bounded MoE assignment with CG overflow.
 
@@ -85,21 +88,29 @@ def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
       pref: [T, D] int32 — experts sorted by gate desc (D ≥ k; D−k is the
         overflow probe depth).
       gates: [T, D] f32 — matching gate probabilities.
-      capacity: per-expert buffer size C.
+      capacity: uniform per-expert buffer size C (scalar special case,
+        bit-identical to ``capacities=full(E, C)``).
+      capacities: [E] per-expert buffer sizes (heterogeneous experts);
+        exactly one of ``capacity`` / ``capacities`` must be given.
     Returns (expert_assign [T,k], slot [T,k], weights [T,k], load [E]).
     """
     T, D = pref.shape
     assert T % block == 0, f"{T} % {block} != 0"
+    if (capacity is None) == (capacities is None):
+        raise ValueError("pass exactly one of capacity / capacities")
+    cap_vec = (jnp.full((n_experts,), capacity, jnp.float32)
+               if capacities is None
+               else jnp.asarray(capacities, jnp.float32))
     n_blocks = T // block
     kernel = functools.partial(_dispatch_kernel, n_experts=n_experts, k=k,
-                               capacity=capacity, block=block,
-                               n_blocks=n_blocks)
+                               block=block, n_blocks=n_blocks)
     return pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((block, D), lambda b: (b, 0)),
             pl.BlockSpec((block, D), lambda b: (b, 0)),
+            pl.BlockSpec((n_experts,), lambda b: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((block, k), lambda b: (b, 0)),
@@ -115,4 +126,4 @@ def cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
         ],
         scratch_shapes=[pltpu.VMEM((n_experts,), jnp.float32)],
         interpret=resolve_interpret(interpret),
-    )(pref, gates)
+    )(pref, gates, cap_vec)

@@ -654,20 +654,32 @@ def multisource_merge(state: MultiSourcePorcState) -> MultiSourcePorcState:
 
 @functools.partial(jax.jit, static_argnames=("n_experts", "k", "capacity", "block"))
 def ref_cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
-                    k: int, capacity: int, block: int = 128):
+                    k: int, capacity: int | None = None,
+                    capacities: jnp.ndarray | None = None, block: int = 128):
     """Oracle for kernels.cg_dispatch.
 
     Args:
       pref: [T, D] experts per token sorted by gate desc (D ≥ k gives the
         overflow depth — the PoRC salted-probe sequence analogue).
       gates: [T, D] matching gate scores (softmax probs).
+      capacity: uniform per-expert buffer size C (the scalar special
+        case; bit-identical to ``capacities=full(E, C)``).
+      capacities: [E] per-expert buffer sizes — the paper's
+        heterogeneous-cluster capacities (Fig 15) on the expert axis.
+        Exactly one of ``capacity`` / ``capacities`` must be given.
     Returns:
       expert_assign [T, k] int32 (-1 = unplaced), slot [T, k] int32
-      (position in the expert's buffer), weights [T, k] f32 (renormalized
-      over placed slots), load [E] f32 final per-expert occupancy.
+      (position in the expert's buffer, < cap_e), weights [T, k] f32
+      (renormalized over placed slots), load [E] f32 final per-expert
+      occupancy.
     """
     T, D = pref.shape
     assert T % block == 0
+    if (capacity is None) == (capacities is None):
+        raise ValueError("pass exactly one of capacity / capacities")
+    cap_vec = (jnp.full((n_experts,), capacity, jnp.float32)
+               if capacities is None
+               else jnp.asarray(capacities, jnp.float32))
 
     def blk(load, xs):
         p, g = xs                                            # [B, D]
@@ -685,7 +697,7 @@ def ref_cg_dispatch(pref: jnp.ndarray, gates: jnp.ndarray, *, n_experts: int,
             pos = jnp.cumsum(onehot.astype(jnp.float32), axis=0) - onehot
             mypos = jnp.take_along_axis(pos, c[:, None], axis=1)[:, 0]
             myload = load[c] + mypos
-            accept = want & (myload < capacity)
+            accept = want & (myload < cap_vec[c])
             col = (jnp.arange(k)[None, :] == nacc[:, None]) & accept[:, None]
             assign = jnp.where(col, c[:, None], assign)
             slot = jnp.where(col, myload.astype(jnp.int32)[:, None], slot)

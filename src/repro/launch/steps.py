@@ -36,28 +36,37 @@ def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig):
 
     def train_step(params, opt_state, batch):
         if k == 1:
-            loss, grads = jax.value_and_grad(
-                lambda p: zoo.loss_fn(p, cfg, batch))(params)
+            (loss, mm), grads = jax.value_and_grad(
+                lambda p: zoo.loss_and_metrics(p, cfg, batch),
+                has_aux=True)(params)
         else:
             micro = jax.tree.map(
                 lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
 
             def mb(carry, b):
-                gsum, lsum = carry
-                l, g = jax.value_and_grad(
-                    lambda p: zoo.loss_fn(p, cfg, b))(params)
+                gsum, lsum, msum = carry
+                (l, m), g = jax.value_and_grad(
+                    lambda p: zoo.loss_and_metrics(p, cfg, b),
+                    has_aux=True)(params)
                 gsum = jax.tree.map(
                     lambda a, x: a + x.astype(jnp.float32), gsum, g)
-                return (gsum, lsum + l), None
+                # max_load_frac is a worst-case; everything else averages
+                msum = {key: (jnp.maximum(msum[key], m[key])
+                              if key == "moe_max_load_frac"
+                              else msum[key] + m[key]) for key in msum}
+                return (gsum, lsum + l, msum), None
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (gsum, lsum), _ = jax.lax.scan(mb, (g0, jnp.float32(0)), micro)
+            (gsum, lsum, msum), _ = jax.lax.scan(
+                mb, (g0, jnp.float32(0), zoo.metric_zeros(cfg)), micro)
             grads = jax.tree.map(lambda g: g / k, gsum)
             loss = lsum / k
+            mm = {key: (v if key == "moe_max_load_frac" else v / k)
+                  for key, v in msum.items()}
         params, opt_state, om = optim.update(params, grads, opt_state,
                                              opt_cfg)
-        return params, opt_state, {"loss": loss, **om}
+        return params, opt_state, {"loss": loss, **om, **mm}
 
     return train_step
 
@@ -104,6 +113,8 @@ def jit_train_step(cfg: ModelConfig, mesh, opt_cfg=None):
                             shd.batch_specs(batch_tree, mesh, pure_dp=eff),
                             is_leaf=lambda x: isinstance(x, P))
         metrics_sh = {"loss": scalar, "lr": scalar, "grad_norm": scalar}
+        # MoE routing telemetry: scalars + the [E] load vector, replicated
+        metrics_sh.update({key: scalar for key in zoo.metric_zeros(cfg)})
         return jax.jit(step,
                        in_shardings=(p_sh, o_sh, b_sh),
                        out_shardings=(p_sh, o_sh, metrics_sh),

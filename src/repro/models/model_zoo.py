@@ -39,6 +39,26 @@ def loss_fn(params, cfg: ModelConfig, batch):
     return family_module(cfg).loss_fn(params, cfg, batch)
 
 
+def loss_and_metrics(params, cfg: ModelConfig, batch):
+    """(loss, aux metrics dict). MoE models surface the CG-routing
+    telemetry (moe_drop_frac, moe_max_load_frac, moe_load [E]); other
+    families return an empty dict."""
+    if cfg.family == "moe":
+        return moe_transformer.loss_fn(params, cfg, batch,
+                                       with_metrics=True)
+    return family_module(cfg).loss_fn(params, cfg, batch), {}
+
+
+def metric_zeros(cfg: ModelConfig) -> dict:
+    """Zero-valued pytree matching loss_and_metrics' aux dict (the
+    grad-accum scan carry / out-sharding template)."""
+    if cfg.family != "moe":
+        return {}
+    return {"moe_drop_frac": jnp.float32(0),
+            "moe_max_load_frac": jnp.float32(0),
+            "moe_load": jnp.zeros((cfg.moe.n_experts,), jnp.float32)}
+
+
 def _use_longctx(cfg: ModelConfig, max_len: int) -> bool:
     return (cfg.family == "dense" and cfg.sliding_window is not None
             and cfg.global_every is not None and max_len > 65536)

@@ -40,36 +40,53 @@ def init_params(cfg, key):
 
 
 def hidden_states(params, cfg, x, positions, collect_kv: bool = False):
+    """Returns (x, aux, z, route_metrics[, kvs]) — route_metrics carries
+    the CG-routing telemetry summed over layers (drop fraction, mean
+    per-expert load [E], worst load/cap_e utilization)."""
+    E = cfg.moe.n_experts
+
     def body(carry, lp):
-        x, aux, z = carry
+        x, aux, z, drop, load, maxl = carry
         h, kv = attention(norm(x, lp["attn_norm"], cfg), lp["attn"], cfg,
                           positions=positions, causal=True,
                           window=cfg.sliding_window, return_kv=True)
         x = x + h
         h, m = moe_ffn(norm(x, lp["mlp_norm"], cfg), lp["moe"], cfg)
         x = x + h
-        return ((shard_act(x, "btd"), aux + m["aux_loss"], z + m["z_loss"]),
+        return ((shard_act(x, "btd"), aux + m["aux_loss"], z + m["z_loss"],
+                 drop + m["drop_frac"], load + m["load"],
+                 jnp.maximum(maxl, m["max_load_frac"])),
                 (kv if collect_kv else None))
 
     body = _remat(body, cfg)
-    (x, aux, z), kvs = jax.lax.scan(
-        body, (x, jnp.float32(0), jnp.float32(0)), params["layers"])
+    (x, aux, z, drop, load, maxl), kvs = jax.lax.scan(
+        body, (x, jnp.float32(0), jnp.float32(0), jnp.float32(0),
+               jnp.zeros((E,), jnp.float32), jnp.float32(0)),
+        params["layers"])
     x = norm(x, params["final_norm"], cfg)
+    rm = {"drop_frac": drop / cfg.n_layers,
+          "load": load / cfg.n_layers,
+          "max_load_frac": maxl}
     if collect_kv:
-        return x, aux, z, kvs
-    return x, aux, z
+        return x, aux, z, rm, kvs
+    return x, aux, z, rm
 
 
-def loss_fn(params, cfg, batch):
+def loss_fn(params, cfg, batch, with_metrics: bool = False):
     tokens = batch["tokens"]
     x = embed_tokens(params["embed"], tokens, cfg.d_model)
     x = shard_act(x, "btd")
     S = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
-    x, aux, z = hidden_states(params, cfg, x, positions)
+    x, aux, z, rm = hidden_states(params, cfg, x, positions)
     labels = shift_labels(tokens)
     ce = chunked_xent(x, params["embed"], labels)
-    return ce + AUX_COEF * aux / cfg.n_layers + Z_COEF * z / cfg.n_layers
+    loss = ce + AUX_COEF * aux / cfg.n_layers + Z_COEF * z / cfg.n_layers
+    if with_metrics:
+        return loss, {"moe_drop_frac": rm["drop_frac"],
+                      "moe_max_load_frac": rm["max_load_frac"],
+                      "moe_load": rm["load"]}
+    return loss
 
 
 def prefill_step(params, cfg, batch, pad_to: int | None = None):
@@ -79,8 +96,8 @@ def prefill_step(params, cfg, batch, pad_to: int | None = None):
     x = shard_act(x, "btd")
     S = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
-    x, _, _, (k, v) = hidden_states(params, cfg, x, positions,
-                                    collect_kv=True)
+    x, _, _, _, (k, v) = hidden_states(params, cfg, x, positions,
+                                       collect_kv=True)
     logits = last_logits(x[:, -1], params["embed"])
     return logits, {"k": pad_cache_seq(k, pad_to),
                     "v": pad_cache_seq(v, pad_to),

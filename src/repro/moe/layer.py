@@ -15,7 +15,7 @@ import jax.numpy as jnp
 # NOTE: imported from the submodule lazily in the functions below to
 # avoid the repro.models ↔ repro.moe import cycle (models.moe_transformer
 # imports this module).
-from .router import RoutingResult, route
+from .router import RoutingResult, expert_capacity_vector, route
 
 
 def _layers():
@@ -59,7 +59,12 @@ def moe_ffn(x: jnp.ndarray, p, cfg):
     B, S, D = x.shape
     E, k = moe.n_experts, moe.top_k
     T = S
-    capacity = max(1, int(moe.capacity_factor * T * k / E))
+    # per-expert capacities from the router's single source of truth;
+    # buffers pad every expert to C_max (ragged cap_e enforced by the
+    # dispatch: slot < cap_e, so smaller experts just leave zero rows)
+    caps = expert_capacity_vector(moe, T)
+    capacity = max(caps)
+    cap_arr = jnp.asarray(caps, jnp.float32)
 
     r: RoutingResult = jax.vmap(
         lambda xg: route(xg, p["router"], moe))(x)           # leaves [B, ...]
@@ -105,6 +110,9 @@ def moe_ffn(x: jnp.ndarray, p, cfg):
         "aux_loss": jnp.mean(r.aux_loss),
         "z_loss": jnp.mean(r.z_loss),
         "drop_frac": jnp.mean((r.assign < 0).astype(jnp.float32)),
-        "max_load_frac": jnp.max(r.load) / capacity,
+        # worst per-expert utilization load/cap_e (== load/C pre-vector;
+        # must stay <= 1: the dispatch never overfills any expert)
+        "max_load_frac": jnp.max(r.load / cap_arr[None, :]),
+        "load": jnp.mean(r.load, axis=0),                 # [E] per group
     }
     return y, metrics

@@ -30,6 +30,49 @@ class RoutingResult(NamedTuple):
     z_loss: jnp.ndarray      # [] router logit z-loss
 
 
+def uniform_capacity(capacity_factor: float, T: int, k: int, E: int) -> int:
+    """The (1+ε)·avg expert buffer bound, C = ⌈-ish⌉ cf·T·k/E.
+
+    Single source of truth for the capacity formula — ``route`` sizes
+    the dispatch against it and ``moe/layer.moe_ffn`` sizes the
+    [B, E, C, D] buffers from the same numbers; any drift silently
+    corrupts the slot→token inverse permutation.
+    """
+    return max(1, int(capacity_factor * T * k / E))
+
+
+def expert_capacity_vector(moe, T: int) -> tuple[int, ...]:
+    """Per-expert capacities as static python ints, length E.
+
+    Resolution order: explicit ``moe.expert_capacities`` (absolute slot
+    counts) > ``moe.capacity_skew`` generator > uniform
+    :func:`uniform_capacity`. The skew generator keeps the total budget
+    at E·C_base and spreads it geometrically so that
+    cap_0 / cap_{E-1} = 1 + skew — the paper's Fig 15 heterogeneous
+    worker capacities transplanted onto the expert axis (overflow
+    probing absorbs what the small experts shed).
+    """
+    E, k = moe.n_experts, moe.top_k
+    if moe.expert_capacities is not None:
+        caps = tuple(int(c) for c in moe.expert_capacities)
+        if len(caps) != E:
+            raise ValueError(
+                f"expert_capacities has {len(caps)} entries, expected {E}")
+        if any(c < 1 for c in caps):
+            raise ValueError(f"expert capacities must be >= 1: {caps}")
+        return caps
+    base = uniform_capacity(moe.capacity_factor, T, k, E)
+    skew = float(getattr(moe, "capacity_skew", 0.0) or 0.0)
+    if skew < 0:
+        raise ValueError(f"capacity_skew must be >= 0: {skew}")
+    if skew == 0.0 or E == 1:
+        return (base,) * E
+    w = [(1.0 + skew) ** (-i / (E - 1)) for i in range(E)]
+    total = E * base
+    wsum = sum(w)
+    return tuple(max(1, int(round(total * wi / wsum))) for wi in w)
+
+
 def _aux_losses(logits: jnp.ndarray, assign: jnp.ndarray, n_experts: int):
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     # fraction of slots landing on each expert
@@ -51,11 +94,18 @@ def route(x: jnp.ndarray, router_w: jnp.ndarray, moe, *,
     probs = jax.nn.softmax(logits, axis=-1)
     depth = k if moe.router == "topk" else min(E, k + moe.overflow_depth)
     gates, pref = jax.lax.top_k(probs, depth)
-    capacity = max(1, int(moe.capacity_factor * T * k / E))
+    caps = expert_capacity_vector(moe, T)
     if block is None:
         block = min(128, T)
-    assign, slot, weights, load = ref_cg_dispatch(
-        pref.astype(jnp.int32), gates, n_experts=E, k=k,
-        capacity=capacity, block=block)
+    if len(set(caps)) == 1:
+        # uniform: keep the scalar path (bit-identical trace to pre-
+        # vector dispatch; parity-gated in tests/test_cg_dispatch_properties)
+        assign, slot, weights, load = ref_cg_dispatch(
+            pref.astype(jnp.int32), gates, n_experts=E, k=k,
+            capacity=caps[0], block=block)
+    else:
+        assign, slot, weights, load = ref_cg_dispatch(
+            pref.astype(jnp.int32), gates, n_experts=E, k=k,
+            capacities=jnp.asarray(caps, jnp.float32), block=block)
     aux, z = _aux_losses(logits, assign, E)
     return RoutingResult(assign, slot, weights, load, aux, z)

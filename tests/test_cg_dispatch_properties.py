@@ -1,0 +1,193 @@
+"""Dispatch-kernel battery: Pallas vs oracle parity + slot invariants.
+
+Sweeps the Pallas ``cg_dispatch`` (interpret mode on CPU — the same
+kernel body the TPU path compiles) against ``ref_cg_dispatch`` across
+E x k x capacity x block, on both the scalar-capacity and the
+per-expert ``capacities [E]`` paths, and pins the heterogeneous-capacity
+slot invariants the layer's inverse-permutation dispatch relies on.
+Hypothesis cases ride along when the library is installed; the
+parametrized sweep runs everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cg_dispatch import cg_dispatch
+from repro.kernels.ref import ref_cg_dispatch
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYP = True
+except ImportError:        # plain sweep still runs without hypothesis
+    HAS_HYP = False
+
+
+def _routing(T, E, D, skew, seed=0):
+    r1, r2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = jax.random.normal(r1, (T, E)) + skew * jax.random.normal(
+        r2, (1, E))
+    gates, pref = jax.lax.top_k(jax.nn.softmax(logits, -1), D)
+    return pref.astype(jnp.int32), gates
+
+
+def _skewed_caps(E, base, ratio=4.0):
+    w = [ratio ** (-i / max(E - 1, 1)) for i in range(E)]
+    s = sum(w)
+    return tuple(max(1, int(round(E * base * wi / s))) for wi in w)
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("E,k,cf,block", [
+    (4, 1, 1.0, 64), (8, 2, 1.25, 128), (16, 2, 1.25, 64),
+    (16, 4, 1.5, 128), (32, 2, 1.1, 256), (64, 8, 1.25, 128),
+])
+def test_pallas_matches_ref_scalar(E, k, cf, block):
+    T, D = 512, min(E, k + 4)
+    pref, gates = _routing(T, E, D, skew=2.0, seed=E + k)
+    cap = max(1, int(cf * T * k / E))
+    ref = ref_cg_dispatch(pref, gates, n_experts=E, k=k, capacity=cap,
+                          block=block)
+    ker = cg_dispatch(pref, gates, n_experts=E, k=k, capacity=cap,
+                      block=block)
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("E,k,block", [(8, 2, 64), (16, 2, 128),
+                                       (16, 4, 64), (32, 8, 128)])
+def test_pallas_matches_ref_capacities_vector(E, k, block):
+    """Heterogeneous per-expert capacities: kernel == oracle exactly."""
+    T = 512
+    pref, gates = _routing(T, E, min(E, k + 4), skew=3.0, seed=11 * E + k)
+    caps = jnp.asarray(_skewed_caps(E, max(1, int(1.25 * T * k / E))),
+                       jnp.float32)
+    ref = ref_cg_dispatch(pref, gates, n_experts=E, k=k, capacities=caps,
+                          block=block)
+    ker = cg_dispatch(pref, gates, n_experts=E, k=k, capacities=caps,
+                      block=block)
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("fn", [ref_cg_dispatch, cg_dispatch],
+                         ids=["ref", "pallas"])
+@pytest.mark.parametrize("E,k", [(8, 1), (16, 2), (32, 4)])
+def test_scalar_equals_uniform_vector(fn, E, k):
+    """capacity=C must be bit-identical to capacities=full(E, C) — the
+    gate that keeps the pre-vector scalar path un-regressed."""
+    T = 384
+    pref, gates = _routing(T, E, min(E, k + 4), skew=2.5, seed=E * k)
+    cap = max(1, int(1.25 * T * k / E))
+    s = fn(pref, gates, n_experts=E, k=k, capacity=cap)
+    v = fn(pref, gates, n_experts=E, k=k,
+           capacities=jnp.full((E,), cap, jnp.float32))
+    for a, b in zip(s, v):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fn", [ref_cg_dispatch, cg_dispatch],
+                         ids=["ref", "pallas"])
+def test_exactly_one_capacity_arg(fn):
+    pref, gates = _routing(256, 8, 4, skew=0.0)
+    with pytest.raises(ValueError):
+        fn(pref, gates, n_experts=8, k=2)
+    with pytest.raises(ValueError):
+        fn(pref, gates, n_experts=8, k=2, capacity=16,
+           capacities=jnp.full((8,), 16.0))
+
+
+# ------------------------------------------------------------ invariants
+
+def _check_invariants(assign, slot, wts, load, caps):
+    assign, slot, wts, load = map(np.asarray, (assign, slot, wts, load))
+    caps = np.asarray(caps)
+    E = len(caps)
+    valid = assign >= 0
+    # per-expert load bounded by its own capacity
+    np.testing.assert_array_less(load - 1e-9, caps + 1e-9)
+    # load == histogram of non-dropped assignments
+    hist = np.bincount(assign[valid], minlength=E).astype(load.dtype)
+    np.testing.assert_array_equal(load, hist)
+    # (expert, slot) pairs unique, slot < cap_e of its own expert
+    pairs = assign[valid] * 1_000_000 + slot[valid]
+    assert len(np.unique(pairs)) == valid.sum()
+    assert (slot[valid] >= 0).all()
+    assert (slot[valid] < caps[assign[valid]]).all()
+    # dropped slots carry zero combine weight
+    assert (wts[~valid] == 0).all()
+    # weights renormalize: == 1 where any slot placed, 0 where all dropped
+    wsum = wts.sum(-1)
+    has = valid.any(-1)
+    np.testing.assert_allclose(wsum[has], 1.0, atol=1e-5)
+    np.testing.assert_allclose(wsum[~has], 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("fn", [ref_cg_dispatch, cg_dispatch],
+                         ids=["ref", "pallas"])
+@pytest.mark.parametrize("skew", [0.0, 2.0, 5.0])
+def test_invariants_heterogeneous_caps(fn, skew):
+    T, E, k = 512, 16, 2
+    pref, gates = _routing(T, E, 8, skew, seed=int(skew * 7))
+    caps = _skewed_caps(E, max(1, int(1.25 * T * k / E)))
+    out = fn(pref, gates, n_experts=E, k=k,
+             capacities=jnp.asarray(caps, jnp.float32))
+    _check_invariants(*out, caps=caps)
+
+
+def test_tiny_capacity_floor():
+    """cap_e = 1 everywhere: at most one slot per expert, rest dropped."""
+    T, E, k = 128, 8, 2
+    pref, gates = _routing(T, E, 6, skew=1.0, seed=5)
+    out = ref_cg_dispatch(pref, gates, n_experts=E, k=k,
+                          capacities=jnp.ones((E,), jnp.float32))
+    _check_invariants(*out, caps=(1,) * E)
+    assert np.asarray(out[3]).sum() <= E
+
+
+def test_starved_expert_sheds_to_next_preference():
+    """An expert with cap 0-ish (=1) under heavy demand: overflow probes
+    place its spill on later preferences instead of dropping it all."""
+    T, E, k = 256, 8, 1
+    pref, gates = _routing(T, E, 6, skew=4.0, seed=9)
+    caps_uni = (max(1, int(1.25 * T * k / E)),) * E
+    hot = int(np.bincount(np.asarray(pref[:, 0]), minlength=E).argmax())
+    caps = list(caps_uni)
+    caps[hot] = 1
+    a_starved = np.asarray(ref_cg_dispatch(
+        pref, gates, n_experts=E, k=k,
+        capacities=jnp.asarray(caps, jnp.float32))[0])
+    a_trunc = np.asarray(ref_cg_dispatch(
+        pref[:, :k], gates[:, :k], n_experts=E, k=k,
+        capacities=jnp.asarray(caps, jnp.float32))[0])
+    assert (a_starved >= 0).sum() > (a_trunc >= 0).sum()
+
+
+# -------------------------------------------------- hypothesis (optional)
+
+if HAS_HYP:
+    SETTINGS = dict(max_examples=15, deadline=None)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4),
+           st.floats(1.0, 8.0))
+    @settings(**SETTINGS)
+    def test_hyp_invariants_random_skewed_caps(seed, k, ratio):
+        T, E = 256, 8
+        pref, gates = _routing(T, E, 6, skew=2.0, seed=seed % 10_000)
+        caps = _skewed_caps(E, max(1, int(1.25 * T * k / E)), ratio=ratio)
+        out = ref_cg_dispatch(pref, gates, n_experts=E, k=k,
+                              capacities=jnp.asarray(caps, jnp.float32))
+        _check_invariants(*out, caps=caps)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+    @settings(**SETTINGS)
+    def test_hyp_scalar_vector_parity_random(seed, k):
+        T, E = 192, 8
+        pref, gates = _routing(T, E, 6, skew=3.0, seed=seed % 10_000)
+        cap = max(1, int(1.25 * T * k / E))
+        s = ref_cg_dispatch(pref, gates, n_experts=E, k=k, capacity=cap)
+        v = ref_cg_dispatch(pref, gates, n_experts=E, k=k,
+                            capacities=jnp.full((E,), cap, jnp.float32))
+        for a, b in zip(s, v):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

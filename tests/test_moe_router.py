@@ -1,4 +1,6 @@
 """CG MoE router behaviour inside the layer (paper technique site a)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,12 +8,14 @@ import pytest
 
 from repro import configs
 from repro.moe.layer import init_moe_params, moe_ffn
-from repro.moe.router import route
+from repro.moe.router import (_aux_losses, expert_capacity_vector, route,
+                              uniform_capacity)
 
 
-def _cfg(router="cg"):
+def _cfg(router="cg", **moe_kw):
     cfg = configs.get_smoke_config("qwen3-moe-235b-a22b")
-    return cfg.replace(moe=__import__('dataclasses').replace(cfg.moe, router=router))
+    return cfg.replace(
+        moe=dataclasses.replace(cfg.moe, router=router, **moe_kw))
 
 
 def test_layer_forward_and_metrics():
@@ -67,3 +71,139 @@ def test_grad_flows_through_layer():
     assert np.isfinite(gnorm) and gnorm > 0
     # expert weights get gradients (dispatch is differentiable)
     assert float(jnp.abs(g["w1"].astype(jnp.float32)).sum()) > 0
+
+
+# ------------------- capacity formula: one source of truth (regression)
+
+def test_uniform_capacity_matches_legacy_formula():
+    """layer.py and router.py used to each inline max(1, int(cf*T*k/E));
+    both now call uniform_capacity — pin it to the legacy arithmetic."""
+    for cf in (0.37, 1.0, 1.25, 1.5, 2.71):
+        for T, k, E in [(64, 2, 8), (128, 8, 128), (1, 1, 4), (96, 2, 16)]:
+            assert uniform_capacity(cf, T, k, E) == \
+                max(1, int(cf * T * k / E))
+
+
+def test_layer_buffer_consistent_with_router_caps():
+    """moe_ffn sizes its [B, E, C, D] buffers from the same
+    expert_capacity_vector the router dispatches against."""
+    cfg = _cfg(capacity_skew=3.0)
+    T = 64
+    caps = expert_capacity_vector(cfg.moe, T)
+    assert len(caps) == cfg.moe.n_experts and max(caps) >= min(caps) >= 1
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, cfg.d_model),
+                          jnp.bfloat16)
+    y, m = moe_ffn(x, p, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    # load/cap_e <= 1 per expert under its OWN capacity, not C_max
+    assert float(m["max_load_frac"]) <= 1.0 + 1e-6
+
+
+@pytest.mark.parametrize("cf", [0.5, 1.0, 1.25, 2.0])
+def test_max_load_frac_bounded_over_factor_sweep(cf):
+    cfg = _cfg(capacity_factor=cf)
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model),
+                          jnp.bfloat16)
+    _, m = moe_ffn(x, p, cfg)
+    assert float(m["max_load_frac"]) <= 1.0 + 1e-6
+
+
+# ------------------------------------ expert_capacity_vector semantics
+
+def test_capacity_skew_preserves_budget_and_ratio():
+    cfg = _cfg(capacity_skew=3.0)
+    T = 64
+    E = cfg.moe.n_experts
+    base = uniform_capacity(cfg.moe.capacity_factor, T, cfg.moe.top_k, E)
+    caps = expert_capacity_vector(cfg.moe, T)
+    assert abs(sum(caps) - E * base) <= E          # rounding slack
+    assert caps == tuple(sorted(caps, reverse=True))
+    assert caps[0] / caps[-1] == pytest.approx(1 + 3.0, rel=0.35)
+
+
+def test_explicit_expert_capacities_win():
+    E = _cfg().moe.n_experts
+    explicit = tuple(range(2, 2 + E))
+    cfg = _cfg(expert_capacities=explicit, capacity_skew=9.0)
+    assert expert_capacity_vector(cfg.moe, 64) == explicit
+
+
+def test_expert_capacities_validation():
+    E = _cfg().moe.n_experts
+    with pytest.raises(ValueError):
+        expert_capacity_vector(
+            _cfg(expert_capacities=(4,) * (E - 1)).moe, 64)
+    with pytest.raises(ValueError):
+        expert_capacity_vector(
+            _cfg(expert_capacities=(0,) + (4,) * (E - 1)).moe, 64)
+    with pytest.raises(ValueError):
+        expert_capacity_vector(_cfg(capacity_skew=-1.0).moe, 64)
+
+
+def test_route_uniform_scalar_equals_uniform_vector():
+    """capacity_skew=0 routes through the scalar dispatch; an explicit
+    uniform expert_capacities vector must give identical results."""
+    cfg0 = _cfg()
+    T = 128
+    caps = expert_capacity_vector(cfg0.moe, T)
+    assert len(set(caps)) == 1
+    cfg_v = _cfg(expert_capacities=caps)
+    w = jax.random.normal(jax.random.PRNGKey(3),
+                          (cfg0.d_model, cfg0.moe.n_experts), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (T, cfg0.d_model))
+    r0, rv = route(x, w, cfg0.moe), route(x, w, cfg_v.moe)
+    for a, b in zip(r0, rv):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_route_skewed_load_within_per_expert_caps():
+    cfg = _cfg(capacity_skew=4.0)
+    T = 128
+    caps = np.asarray(expert_capacity_vector(cfg.moe, T))
+    w = jax.random.normal(jax.random.PRNGKey(5),
+                          (cfg.d_model, cfg.moe.n_experts), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (T, cfg.d_model))
+    r = route(x, w, cfg.moe)
+    assert (np.asarray(r.load) <= caps + 1e-9).all()
+
+
+# ----------------------------------------- _aux_losses edge cases (S3)
+
+def test_aux_loss_all_dropped_no_sentinel_leak():
+    """Every slot dropped: the sentinel one-hot column (expert index E)
+    must be sliced away, not leak into f — aux comes out exactly 0."""
+    T, E = 32, 8
+    logits = jax.random.normal(jax.random.PRNGKey(7), (T, E))
+    assign = jnp.full((T, 2), -1, jnp.int32)
+    aux, z = _aux_losses(logits, assign, E)
+    assert float(aux) == 0.0
+    assert np.isfinite(float(z))
+
+
+def test_aux_loss_matches_manual_fraction():
+    T, E = 64, 4
+    logits = jnp.zeros((T, E))
+    assign = jnp.zeros((T, 1), jnp.int32)        # all slots on expert 0
+    aux, _ = _aux_losses(logits, assign, E)
+    # f = [1,0,0,0], p = 1/E each -> aux = E * 1 * 1/E = 1
+    assert float(aux) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_topk_router_no_overflow_probes():
+    """router='topk' must truncate preferences at depth k: every placed
+    slot's expert is within the token's top-k gate choices."""
+    cfg = _cfg("topk")
+    T, k = 128, cfg.moe.top_k
+    w = jax.random.normal(jax.random.PRNGKey(8),
+                          (cfg.d_model, cfg.moe.n_experts), jnp.float32)
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(9), (T, cfg.d_model))
+    r = route(x, w, cfg.moe)
+    logits = x @ w
+    topk = np.asarray(jax.lax.top_k(logits, k)[1])
+    assign = np.asarray(r.assign)
+    for t in range(T):
+        placed = assign[t][assign[t] >= 0]
+        assert set(placed.tolist()) <= set(topk[t].tolist())

@@ -26,7 +26,8 @@ ROOT = Path(__file__).resolve().parent.parent
 # docs that must exist AND be scanned — the playbooks other docs,
 # benchmarks and CI gate messages point readers at
 REQUIRED = ("docs/tuning.md", "docs/partitioners.md",
-            "docs/fault_tolerance.md", "docs/multihost.md")
+            "docs/fault_tolerance.md", "docs/multihost.md",
+            "docs/moe.md")
 
 
 def iter_docs():
